@@ -1,0 +1,88 @@
+"""Raw data-access-time microbenchmark (paper §1-§2, the mechanism itself).
+
+Measures per-batch access time for RS vs CS vs SS at two tiers:
+  host   memmapped corpus rows (the paper's disk/RAM regime)
+  device device-resident array: row gather vs contiguous dynamic_slice
+         (the HBM->VMEM regime; see kernels/sampled_gather.py for the DMA-
+         descriptor view)
+
+Emits CSV rows: name,us_per_call,derived (derived = speedup vs random).
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import samplers
+from repro.core.erm import gather_batch, slice_batch
+from repro.data import dataset, pipeline
+
+
+def _time(fn, n=20, warmup=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def host_bench(tmp: Path, rows=200_000, features=100, batch=1000):
+    """Memmap access time per scheme. Corpus ~80 MB by default."""
+    corpus = tmp / f"bench_corpus_{rows}x{features}.bin"
+    if not corpus.exists():
+        dataset.synth_erm_corpus(corpus, rows=rows, features=features - 1)
+    out = {}
+    for scheme in samplers.SCHEMES:
+        p = pipeline.DataPipeline(pipeline.PipelineConfig(
+            corpus=corpus, batch_size=batch, sampling=scheme, prefetch=0))
+        _time(p._read_batch, n=50, warmup=5)
+        p.stats = pipeline.AccessStats()
+        for _ in range(100):
+            p._read_batch()
+        out[scheme] = p.stats.s_per_batch
+    return out
+
+
+def device_bench(rows=200_000, features=100, batch=1000):
+    """Device-resident selection: gather (RS) vs dynamic_slice (CS/SS)."""
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (rows, features), jnp.float32)
+    y = jax.random.normal(key, (rows,), jnp.float32)
+    idx = jax.random.randint(key, (batch,), 0, rows, jnp.int32)
+    start = jnp.asarray(1000)
+
+    g = jax.jit(lambda X, y, i: gather_batch(X, y, i))
+    s = jax.jit(lambda X, y, st: slice_batch(X, y, st, batch))
+    t_gather = _time(lambda: jax.block_until_ready(g(X, y, idx)))
+    t_slice = _time(lambda: jax.block_until_ready(s(X, y, start)))
+    return {"random": t_gather, "systematic": t_slice, "cyclic": t_slice}
+
+
+def main(tmp: Path = Path("artifacts/bench")):
+    tmp.mkdir(parents=True, exist_ok=True)
+    rows = []
+    host = host_bench(tmp)
+    for scheme, t in host.items():
+        rows.append((f"access_host_{scheme}", t * 1e6,
+                     f"speedup_vs_rs={host['random'] / t:.2f}"))
+    dev = device_bench()
+    for scheme in ("random", "systematic"):
+        t = dev[scheme]
+        rows.append((f"access_device_{scheme}", t * 1e6,
+                     f"speedup_vs_rs={dev['random'] / t:.2f}"))
+    # cost-model predictions for context
+    from repro.core import access_model as am
+    for tier in ("hdd", "ssd", "ram"):
+        pred = am.predicted_speedup(am.TIERS[tier], 200_000, 1000, 400)
+        rows.append((f"access_model_pred_{tier}", 0.0, f"speedup={pred:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.2f},{derived}")

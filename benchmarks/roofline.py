@@ -1,0 +1,59 @@
+"""§Roofline: consolidate the dry-run artifacts into the per-(arch x shape x
+mesh) three-term roofline table. Reads artifacts/dryrun/*.json (produced by
+python -m repro.launch.dryrun --all [--multi-pod]).
+
+CSV: name,us_per_call,derived where us_per_call = modeled step time
+(max of the three terms, us) and derived = the three terms + dominant +
+useful fraction.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(mesh="pod16x16", tag=""):
+    rows = []
+    if not ART.exists():
+        return rows
+    suffix = f"__{tag}" if tag else ""
+    for f in sorted(ART.glob(f"*__{mesh}{suffix}.json")):
+        d = json.loads(f.read_text())
+        if tag == "" and d.get("tag"):
+            continue
+        rows.append(d)
+    return rows
+
+
+def table(mesh="pod16x16", tag=""):
+    out = []
+    for d in load(mesh, tag):
+        name = f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}"
+        if tag:
+            name += f"_{tag}"
+        if d["status"] != "ok":
+            out.append((name, 0.0, f"status={d['status']}"))
+            continue
+        r = d["roofline"]
+        uf = d.get("useful_fraction")
+        out.append((
+            name,
+            r["step_s"] * 1e6,
+            f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+            f"collective_s={r['collective_s']:.4f};dominant={r['dominant']};"
+            f"useful={uf if uf is None else round(uf, 3)}"))
+    return out
+
+
+def main():
+    rows = table("pod16x16") + table("pod2x16x16")
+    # §Perf optimized variants (baseline-vs-opt pairs live side by side)
+    rows += table("pod16x16", tag="opt")
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,79 @@
+"""Benchmark harness: one function per paper table/figure + system benches.
+
+  erm_timing       paper Tables 2-4 (training time + objective, 5 solvers x
+                   2 step rules x 3 samplings, memmap-streamed)
+  erm_convergence  paper Figs 1-4 (gap vs time curves, device-resident)
+  access_time      §1-2 raw access-time microbench (host memmap + device)
+  roofline         §Roofline consolidation of the dry-run artifacts
+  kernels          Pallas kernel interpret-mode sanity timings
+
+Prints ``name,us_per_call,derived`` CSV. Full-scale knobs:
+  python -m benchmarks.erm_timing --rows 2000000 --epochs 30
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def _kernel_rows():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    data = jax.random.normal(key, (4096, 256))
+    t0 = time.perf_counter()
+    out = ops.block_gather(data, jnp.asarray(2, jnp.int32), batch_size=256)
+    jax.block_until_ready(out)
+    rows.append(("kernel_block_gather_interp", (time.perf_counter() - t0) * 1e6,
+                 "grid=1;one-DMA-per-batch"))
+    idx = jax.random.randint(key, (256,), 0, 4096, jnp.int32)
+    t0 = time.perf_counter()
+    out = ops.random_gather(data, idx)
+    jax.block_until_ready(out)
+    rows.append(("kernel_random_gather_interp", (time.perf_counter() - t0) * 1e6,
+                 "grid=b;one-DMA-per-row"))
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(key, (1, 256, 2, 64))
+    v = jax.random.normal(key, (1, 256, 2, 64))
+    t0 = time.perf_counter()
+    o = ops.flash_attention(q, k, v, causal=True)
+    jax.block_until_ready(o)
+    err = float(jnp.max(jnp.abs(o - ref.attention(q, k, v, causal=True))))
+    rows.append(("kernel_flash_attention_interp", (time.perf_counter() - t0) * 1e6,
+                 f"max_err_vs_ref={err:.1e}"))
+    return rows
+
+
+SECTIONS = []
+
+
+def main() -> None:
+    from benchmarks import access_time, erm_convergence, erm_timing, roofline
+
+    sections = [
+        ("access_time", access_time.main),
+        ("erm_timing", erm_timing.main),
+        ("erm_convergence", erm_convergence.main),
+        ("roofline", roofline.main),
+        ("kernels", _kernel_rows),
+    ]
+    failures = []
+    print("name,us_per_call,derived")
+    for name, fn in sections:
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.2f},{derived}", flush=True)
+        except Exception as e:
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {[n for n, _ in failures]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: the paper in 60 seconds.
+
+Solves l2-regularized logistic ERM with SAGA under the three sampling
+schemes and prints per-epoch wall time + final objective — systematic /
+cyclic sampling reach the same objective several times faster than random
+sampling (Chauhan, Sharma, Dahiya: Applied Intelligence 2018).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ERMProblem, SolverConfig, run, samplers,
+                        synth_classification)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    l, n = 65536, 64
+    X, y, _ = synth_classification(key, l, n, separation=2.0)
+    prob = ERMProblem(loss="logistic", reg=1e-3)
+    L = float(prob.lipschitz(X))
+    cfg = SolverConfig(solver="saga", step_mode="constant", step_size=1.0 / L)
+    w0 = jnp.zeros(n)
+
+    print(f"{'scheme':12s} {'epochs':>6s} {'time':>8s} {'objective':>12s}")
+    for scheme in samplers.SCHEMES:
+        # compile warmup
+        run(prob, cfg, scheme, X, y, w0, batch_size=512, epochs=1,
+            record_objective=False)
+        t0 = time.perf_counter()
+        w, hist = run(prob, cfg, scheme, X, y, w0, batch_size=512, epochs=10)
+        dt = time.perf_counter() - t0
+        print(f"{scheme:12s} {10:6d} {dt:7.2f}s {float(hist[-1]):12.8f}")
+    print("\ncontiguous access (cyclic/systematic) is the paper's speedup;"
+          "\nsee benchmarks/erm_timing.py for the full Tables 2-4 sweep.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — 'Faster Learning by Reduction of Data Access Time' (Chauhan et al.,
+Applied Intelligence 2018) as a production-grade multi-pod JAX framework.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,40 @@
+"""Architecture config registry: --arch <id> resolves here."""
+from importlib import import_module
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+
+_MODULES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "yi-6b": "yi_6b",
+    "stablelm-3b": "stablelm_3b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "internvl2-26b": "internvl2_26b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-370m": "mamba2_370m",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return import_module(f".{_MODULES[arch]}", __package__)
+
+
+def get(arch: str) -> ModelConfig:
+    """Full (assignment-exact) config for --arch <id>."""
+    return _mod(arch).FULL
+
+
+def smoke(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return _mod(arch).SMOKE
+
+
+def all_full() -> Dict[str, ModelConfig]:
+    return {a: get(a) for a in ARCH_IDS}

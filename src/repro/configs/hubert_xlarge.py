@@ -1,0 +1,19 @@
+"""hubert-xlarge [audio] — encoder-only, 48L d_model=1280 16H (MHA kv=16)
+d_ff=5120 vocab=504 (k-means unit targets). The conv waveform frontend is a
+STUB: input_specs() provides precomputed frame embeddings (frontend_dim=512,
+the w2v2 feature-extractor width). No decode shapes (encoder-only).
+[arXiv:2106.07447; unverified]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hubert-xlarge", family="encoder",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab=504, rope_theta=1e4, frontend_dim=512,
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab=64, frontend_dim=32,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

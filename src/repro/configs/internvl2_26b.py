@@ -1,0 +1,19 @@
+"""internvl2-26b [vlm] — backbone InternLM2: 48L d_model=6144 48H (GQA kv=8)
+d_ff=16384 vocab=92553. InternViT frontend is a STUB: input_specs() provides
+precomputed patch embeddings (frontend_dim=3200, InternViT-6B width), mapped
+into the LM by a learned projector. [arXiv:2404.16821; hf]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab=92553, rope_theta=1e6,
+    frontend_dim=3200, n_patches=256,
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, frontend_dim=48, n_patches=8,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

@@ -1,0 +1,17 @@
+"""mamba2-370m [ssm] — 48L d_model=1024 (attention-free) vocab=50280,
+ssm_state=128. SSD (state-space duality): expand=2 -> d_inner=2048,
+head_dim=64 -> 32 ssm heads, conv kernel 4, chunk 256. [arXiv:2405.21060]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, vocab=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256, conv_kernel=4,
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=2, d_model=64, vocab=512,
+    ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

@@ -1,0 +1,23 @@
+"""The paper's own experimental configuration: l2-regularized logistic ERM
+(eq. 2) solved with SAG/SAGA/SVRG/SAAG-II/MBSGD under RS/CS/SS sampling,
+mini-batches of 200/500/1000, constant step 1/L or backtracking line search,
+30 epochs (paper §4.1, Tables 2-4)."""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ERMConfig:
+    name: str = "paper-erm"
+    loss: str = "logistic"
+    reg: float = 1e-4
+    batch_sizes: Tuple[int, ...] = (200, 1000)   # paper tables use 200 & 1000
+    epochs: int = 30
+    solvers: Tuple[str, ...] = ("sag", "saga", "svrg", "saag2", "mbsgd")
+    step_modes: Tuple[str, ...] = ("constant", "line_search")
+    schemes: Tuple[str, ...] = ("random", "cyclic", "systematic")
+
+
+FULL = ERMConfig()
+# reduced setting used by tests / quick benchmarks
+SMOKE = ERMConfig(name="paper-erm-smoke", batch_sizes=(64,), epochs=3)

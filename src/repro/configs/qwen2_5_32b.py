@@ -1,0 +1,16 @@
+"""qwen2.5-32b [dense] — 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064. GQA, QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=27648, vocab=152064, rope_theta=1e6, qkv_bias=True,
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=192, vocab=512,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

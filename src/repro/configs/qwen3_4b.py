@@ -1,0 +1,16 @@
+"""qwen3-4b [dense] — 36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936.
+qk_norm, GQA. [hf:Qwen/Qwen3-8B; hf] head_dim=128 per HF source."""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=9728, vocab=151936, rope_theta=1e6, qk_norm=True,
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

@@ -1,0 +1,18 @@
+"""qwen3-moe-235b-a22b [moe] — 94L d_model=4096 64H (GQA kv=4) d_ff=1536
+(per-expert) vocab=151936, MoE 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B; hf]
+head_dim=128 per the HF source (attention dim decoupled from d_model)."""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=1536, vocab=151936, n_experts=128, top_k=8,
+    qk_norm=True, rope_theta=1e6,
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab=512, n_experts=8, top_k=2, capacity_factor=4.0,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

@@ -1,0 +1,17 @@
+"""qwen3-moe-30b-a3b [moe] — 48L d_model=2048 32H (GQA kv=4) d_ff=768
+(per-expert) vocab=151936, MoE 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=768, vocab=151936, n_experts=128, top_k=8,
+    qk_norm=True, rope_theta=1e6,
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=64, vocab=512, n_experts=8, top_k=2, capacity_factor=4.0,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

@@ -1,0 +1,19 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (MQA kv=1) d_ff=7680
+vocab=256000. RG-LRU + local attention (window 2048), pattern 1 attn : 2
+recurrent. head_dim=256, lru_width=2560. [arXiv:2402.19427; hf]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab=256000, rope_theta=1e4, attn_window=2048,
+    block_pattern=("rglru", "rglru", "attn"), lru_width=2560, conv_kernel=4,
+    scan_layers=False,  # heterogeneous pattern -> unrolled layers
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+    d_ff=128, vocab=512, attn_window=32, lru_width=64,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

@@ -1,0 +1,16 @@
+"""stablelm-3b [dense] — 32L d_model=2560 32H (MHA: kv=32) d_ff=6912
+vocab=50304. [hf:stabilityai/stablelm-2-1_6b; unverified]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="stablelm-3b", family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+    d_ff=6912, vocab=50304, rope_theta=1e4, qkv_bias=True,
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab=512,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

@@ -1,0 +1,16 @@
+"""yi-6b [dense] — 32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+llama-arch GQA. [arXiv:2403.04652; hf]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="yi-6b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=11008, vocab=64000, rope_theta=5e6,
+    param_dtype="bfloat16", activation_dtype="bfloat16",
+)
+
+SMOKE = FULL.with_(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=160, vocab=512,
+    param_dtype="float32", activation_dtype="float32", remat=False,
+)

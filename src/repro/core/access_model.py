@@ -1,0 +1,70 @@
+"""Data-access-time cost model (paper §1, eq. (1)) generalised across tiers.
+
+The paper decomposes ``training_time = access_time + processing_time`` and
+``access_time = seek + rotational latency + transfer``. On electronic tiers
+(RAM, SSD, HBM) seek/latency collapse into a fixed per-descriptor issue cost,
+but the block-wise transfer mechanics are identical: a contiguous mini-batch
+costs ~1 descriptor, a scattered one costs ~b. This module predicts access
+time per scheme per tier; `benchmarks/access_time.py` measures the real thing
+and compares.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import samplers
+
+
+@dataclasses.dataclass(frozen=True)
+class Tier:
+    """A storage tier. Times in seconds, bandwidth in bytes/s, block in bytes."""
+    name: str
+    seek_s: float          # head movement (0 for electronic tiers)
+    latency_s: float       # rotational / per-request issue latency
+    bandwidth: float       # sustained transfer bandwidth
+    block_bytes: int       # minimum transfer granule
+
+
+# Representative hardware profiles. HDD/SSD/RAM follow the paper's narrative;
+# HBM_DMA models TPU v5e HBM->VMEM block DMA (819 GB/s, ~1us descriptor issue).
+HDD = Tier("hdd", seek_s=9e-3, latency_s=4.2e-3, bandwidth=160e6, block_bytes=4096)
+SSD = Tier("ssd", seek_s=0.0, latency_s=60e-6, bandwidth=2.5e9, block_bytes=4096)
+RAM = Tier("ram", seek_s=0.0, latency_s=1e-7, bandwidth=25e9, block_bytes=64)
+HBM_DMA = Tier("hbm_dma", seek_s=0.0, latency_s=1e-6, bandwidth=819e9, block_bytes=512)
+TIERS = {t.name: t for t in (HDD, SSD, RAM, HBM_DMA)}
+
+
+def batch_access_time(tier: Tier, scheme: str, batch_size: int,
+                      row_bytes: int) -> float:
+    """Predicted seconds to access ONE mini-batch of `batch_size` rows.
+
+    Contiguous schemes (CS/SS) issue one descriptor covering the whole block;
+    RS issues one per row (each row may straddle block granules).
+    """
+    total_bytes = batch_size * row_bytes
+    if scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
+        n_desc = 1
+        blocks = math.ceil(total_bytes / tier.block_bytes)
+    elif scheme == samplers.RANDOM:
+        n_desc = batch_size
+        blocks = batch_size * math.ceil(row_bytes / tier.block_bytes)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    issue = n_desc * (tier.seek_s + tier.latency_s)
+    transfer = blocks * tier.block_bytes / tier.bandwidth
+    return issue + transfer
+
+
+def epoch_access_time(tier: Tier, scheme: str, l: int, batch_size: int,
+                      row_bytes: int) -> float:
+    m = samplers.num_batches(l, batch_size)
+    return m * batch_access_time(tier, scheme, batch_size, row_bytes)
+
+
+def predicted_speedup(tier: Tier, l: int, batch_size: int, row_bytes: int,
+                      processing_s_per_epoch: float = 0.0) -> float:
+    """Predicted epoch-time speedup of SS over RS (paper reports up to 6x)."""
+    rs = epoch_access_time(tier, samplers.RANDOM, l, batch_size, row_bytes)
+    ss = epoch_access_time(tier, samplers.SYSTEMATIC, l, batch_size, row_bytes)
+    return (rs + processing_s_per_epoch) / (ss + processing_s_per_epoch)

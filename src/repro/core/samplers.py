@@ -1,0 +1,172 @@
+"""Mini-batch sampling schemes from the paper (§2).
+
+Three schemes select mini-batches of size ``b`` from ``l`` data points:
+
+* **Random sampling (RS)** — with or without replacement; scattered access.
+* **Cyclic/sequential sampling (CS)** — batch ``j`` is rows ``[j*b, (j+1)*b)``;
+  fully contiguous and deterministic.
+* **Systematic sampling (SS)** — a random permutation of the ``m`` block
+  *starts*; each batch is a contiguous run ``[start, start+b)``.
+
+Each scheme is exposed three ways, because the framework consumes it at three
+levels:
+
+1. :func:`epoch_indices` — a dense ``(m, b)`` int32 matrix of indices for one
+   epoch, traceable under ``jax.jit`` (used by the ERM solvers).
+2. :class:`SamplerState` + :func:`next_batch` — a pure functional stepper used
+   by the host data pipeline (two integers of state; exactly reconstructable
+   from ``(seed, step)`` which is what makes checkpoint/elastic-restart cheap).
+3. :func:`batch_slice_starts` — block starts only, for contiguous consumers
+   (``lax.dynamic_slice`` / Pallas block DMA) where materialising per-row
+   indices would defeat the point.
+
+The last batch is handled by padding ``l`` up to ``m*b`` with wrap-around
+indices (the paper allows the trailing batch to be smaller; wrap-around keeps
+shapes static for XLA while preserving the access pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RANDOM = "random"
+CYCLIC = "cyclic"
+SYSTEMATIC = "systematic"
+SCHEMES = (RANDOM, CYCLIC, SYSTEMATIC)
+
+
+def num_batches(l: int, batch_size: int) -> int:
+    return -(-l // batch_size)
+
+
+# ---------------------------------------------------------------------------
+# 1. jit-traceable epoch index matrices
+# ---------------------------------------------------------------------------
+
+def epoch_indices(scheme: str, key: jax.Array, l: int, batch_size: int,
+                  with_replacement: bool = False) -> jax.Array:
+    """Return an ``(m, b)`` int32 matrix of row indices for one epoch.
+
+    Traceable: ``l`` and ``batch_size`` are static, ``key`` is traced.
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown sampling scheme {scheme!r}; want one of {SCHEMES}")
+    m = num_batches(l, batch_size)
+    padded = m * batch_size
+    if scheme == CYCLIC:
+        idx = jnp.arange(padded, dtype=jnp.int32) % l
+        return idx.reshape(m, batch_size)
+    if scheme == SYSTEMATIC:
+        # Random permutation of block starts; rows within a block contiguous.
+        starts = jax.random.permutation(key, m).astype(jnp.int32) * batch_size
+        offs = jnp.arange(batch_size, dtype=jnp.int32)
+        return (starts[:, None] + offs[None, :]) % l
+    # RANDOM
+    if with_replacement:
+        return jax.random.randint(key, (m, batch_size), 0, l, dtype=jnp.int32)
+    perm = jax.random.permutation(key, l).astype(jnp.int32)
+    perm = jnp.concatenate([perm, perm[: padded - l]])
+    return perm.reshape(m, batch_size)
+
+
+def batch_slice_starts(scheme: str, key: jax.Array, l: int,
+                       batch_size: int) -> jax.Array:
+    """Block starts (m,) for contiguous schemes (CS/SS).
+
+    Consumers use ``lax.dynamic_slice(data, (start, 0), (b, n))`` — one DMA
+    descriptor per batch, the TPU analogue of the paper's single seek.
+    """
+    m = num_batches(l, batch_size)
+    if scheme == CYCLIC:
+        return jnp.arange(m, dtype=jnp.int32) * batch_size
+    if scheme == SYSTEMATIC:
+        return jax.random.permutation(key, m).astype(jnp.int32) * batch_size
+    raise ValueError(f"scheme {scheme!r} has no contiguous block structure")
+
+
+# ---------------------------------------------------------------------------
+# 2. host-side functional stepper (data pipeline / checkpointing)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SamplerState:
+    """Two-integer sampler state: deterministic, trivially checkpointable.
+
+    ``seed`` fixes the whole schedule; ``step`` is the global batch counter.
+    Any host can reconstruct any other host's schedule from ``(seed, step)``
+    alone — the property the fault-tolerance layer relies on.
+    """
+    scheme: str
+    seed: int
+    step: int
+    l: int
+    batch_size: int
+    with_replacement: bool = False
+
+    @property
+    def m(self) -> int:
+        return num_batches(self.l, self.batch_size)
+
+    @property
+    def epoch(self) -> int:
+        return self.step // self.m
+
+    @property
+    def batch_in_epoch(self) -> int:
+        return self.step % self.m
+
+
+def make_sampler(scheme: str, seed: int, l: int, batch_size: int,
+                 with_replacement: bool = False) -> SamplerState:
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown sampling scheme {scheme!r}")
+    if batch_size <= 0 or l <= 0:
+        raise ValueError("l and batch_size must be positive")
+    return SamplerState(scheme, seed, 0, l, batch_size, with_replacement)
+
+
+def _epoch_rng(state: SamplerState) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([state.seed, state.epoch]))
+
+
+def next_batch(state: SamplerState) -> Tuple[np.ndarray, SamplerState]:
+    """Return (indices (b,), new_state). Host-side numpy; O(m) not O(l) for SS."""
+    j = state.batch_in_epoch
+    b, l, m = state.batch_size, state.l, state.m
+    if state.scheme == CYCLIC:
+        idx = (np.arange(j * b, (j + 1) * b, dtype=np.int64)) % l
+    elif state.scheme == SYSTEMATIC:
+        starts = _epoch_rng(state).permutation(m) * b
+        idx = (starts[j] + np.arange(b, dtype=np.int64)) % l
+    elif state.with_replacement:
+        # fresh draw per batch, but deterministic in (seed, step)
+        rng = np.random.default_rng(np.random.SeedSequence([state.seed, state.step]))
+        idx = rng.integers(0, l, size=b)
+    else:
+        perm = _epoch_rng(state).permutation(l)
+        perm = np.concatenate([perm, perm[: m * b - l]])
+        idx = perm[j * b:(j + 1) * b]
+    return idx.astype(np.int64), dataclasses.replace(state, step=state.step + 1)
+
+
+def next_block_start(state: SamplerState) -> Tuple[int, SamplerState]:
+    """Contiguous-scheme fast path: return (row_start, new_state) only."""
+    if state.scheme == CYCLIC:
+        start = state.batch_in_epoch * state.batch_size
+    elif state.scheme == SYSTEMATIC:
+        starts = _epoch_rng(state).permutation(state.m) * state.batch_size
+        start = int(starts[state.batch_in_epoch])
+    else:
+        raise ValueError("random sampling has no block structure")
+    return start, dataclasses.replace(state, step=state.step + 1)
+
+
+def restore(scheme: str, seed: int, step: int, l: int, batch_size: int,
+            with_replacement: bool = False) -> SamplerState:
+    """Rebuild sampler state from checkpoint metadata (exact resume)."""
+    s = make_sampler(scheme, seed, l, batch_size, with_replacement)
+    return dataclasses.replace(s, step=step)

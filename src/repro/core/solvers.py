@@ -1,0 +1,262 @@
+"""The paper's five stochastic solvers, each usable with RS/CS/SS sampling
+and with constant step size or backtracking line search (paper §4.1).
+
+Solvers (step 7 of Algorithm 1):
+
+* **MBSGD**   w <- w - (a/|B|) sum_{i in B} grad f_i(w)                 [23]
+* **SAG**     table of per-batch gradients; w <- w - a * mean(table)    [22]
+* **SAGA**    w <- w - a (g_B - table_B + mean(table))                  [11]
+* **SVRG**    epoch snapshot wt, mu = full grad(wt);
+              w <- w - a (g_B(w) - g_B(wt) + mu)                        [13]
+* **SAAG-II** like SVRG but the snapshot is the previous epoch's LAST
+              iterate and the l2 regularizer is applied exactly at every
+              step (biased variance reduction)                          [3]
+
+Two execution modes:
+
+* :func:`run` — fully jit'd device-resident loop (``lax.scan`` over batches,
+  Python loop over epochs). Batch selection happens IN-GRAPH with the paper's
+  access patterns: ``dynamic_slice`` for CS/SS (one DMA descriptor) vs row
+  gather for RS (~b descriptors).
+* :func:`make_step_fn` / :func:`epoch_begin` — jit'd single-batch update for
+  host-driven loops where batches stream from a memmapped corpus
+  (``repro.data``); this is the paper's actual regime (data on disk) and is
+  what ``benchmarks/erm_timing.py`` times.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import samplers
+from .erm import ERMProblem, gather_batch
+
+MBSGD, SAG, SAGA, SVRG, SAAG2 = "mbsgd", "sag", "saga", "svrg", "saag2"
+SOLVERS = (MBSGD, SAG, SAGA, SVRG, SAAG2)
+CONSTANT, LINE_SEARCH = "constant", "line_search"
+
+
+class SolverConfig(NamedTuple):
+    solver: str = MBSGD
+    step_mode: str = CONSTANT
+    step_size: float = 0.1        # constant step, or initial step for LS
+    ls_shrink: float = 0.5        # backtracking factor rho
+    ls_c: float = 1e-4            # Armijo constant
+    ls_max_iter: int = 25
+
+
+class SolverState(NamedTuple):
+    """Uniform state pytree; unused slots are zero-size arrays."""
+    w: jax.Array
+    table: jax.Array          # (m, n) per-batch gradient memory (SAG/SAGA)
+    table_mean: jax.Array     # (n,) running mean of table        (SAG/SAGA)
+    snapshot: jax.Array       # (n,) epoch snapshot w~            (SVRG/SAAG2)
+    snapshot_grad: jax.Array  # (n,) full gradient at snapshot    (SVRG/SAAG2)
+
+
+def _needs_table(solver: str) -> bool:
+    return solver in (SAG, SAGA)
+
+
+def _needs_snapshot(solver: str) -> bool:
+    return solver in (SVRG, SAAG2)
+
+
+def init_state(solver: str, w0: jax.Array, num_batches: int) -> SolverState:
+    n = w0.shape[0]
+    dt = w0.dtype
+    z = jnp.zeros((0,), dt)
+    table = jnp.zeros((num_batches, n), dt) if _needs_table(solver) else jnp.zeros((0, 0), dt)
+    tmean = jnp.zeros((n,), dt) if _needs_table(solver) else z
+    snap = jnp.zeros((n,), dt) if _needs_snapshot(solver) else z
+    sgrad = jnp.zeros((n,), dt) if _needs_snapshot(solver) else z
+    return SolverState(w0, table, tmean, snap, sgrad)
+
+
+# ---------------------------------------------------------------------------
+# step size selection
+# ---------------------------------------------------------------------------
+
+def _armijo(problem: ERMProblem, cfg: SolverConfig, w: jax.Array, v: jax.Array,
+            g: jax.Array, Xb: jax.Array, yb: jax.Array) -> jax.Array:
+    """Backtracking line search on the MINI-BATCH objective only (paper §4.1:
+    full-dataset line search 'could hurt the convergence ... by taking huge
+    time'). Direction is -v; sufficient decrease wrt <g, v>."""
+    f0 = problem.batch_objective(w, Xb, yb)
+    gv = jnp.dot(g, v)
+
+    def cond(carry):
+        alpha, it = carry
+        f_new = problem.batch_objective(w - alpha * v, Xb, yb)
+        return (f_new > f0 - cfg.ls_c * alpha * gv) & (it < cfg.ls_max_iter)
+
+    def body(carry):
+        alpha, it = carry
+        return alpha * cfg.ls_shrink, it + 1
+
+    alpha0 = jnp.asarray(cfg.step_size, w.dtype)
+    alpha, _ = jax.lax.while_loop(cond, body, (alpha0, 0))
+    # if v is not a descent direction on this batch, fall back to constant
+    return jnp.where(gv > 0, alpha, alpha0)
+
+
+def _pick_step(problem, cfg, w, v, g, Xb, yb) -> jax.Array:
+    if cfg.step_mode == CONSTANT:
+        return jnp.asarray(cfg.step_size, w.dtype)
+    if cfg.step_mode == LINE_SEARCH:
+        return _armijo(problem, cfg, w, v, g, Xb, yb)
+    raise ValueError(f"unknown step mode {cfg.step_mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# one mini-batch update (shared by both execution modes)
+# ---------------------------------------------------------------------------
+
+def batch_step(problem: ERMProblem, cfg: SolverConfig, state: SolverState,
+               Xb: jax.Array, yb: jax.Array, j: jax.Array) -> SolverState:
+    """Apply one solver update using batch ``j`` with data (Xb, yb)."""
+    w = state.w
+    g = problem.batch_grad(w, Xb, yb)
+    solver = cfg.solver
+
+    if solver == MBSGD:
+        v = g
+        new_state = state
+
+    elif solver == SAG:
+        m = state.table.shape[0]
+        old = state.table[j]
+        mean_new = state.table_mean + (g - old) / m
+        v = mean_new
+        new_state = state._replace(table=state.table.at[j].set(g),
+                                   table_mean=mean_new)
+
+    elif solver == SAGA:
+        m = state.table.shape[0]
+        old = state.table[j]
+        v = g - old + state.table_mean
+        mean_new = state.table_mean + (g - old) / m
+        new_state = state._replace(table=state.table.at[j].set(g),
+                                   table_mean=mean_new)
+
+    elif solver == SVRG:
+        g_snap = problem.batch_grad(state.snapshot, Xb, yb)
+        v = g - g_snap + state.snapshot_grad
+        new_state = state
+
+    elif solver == SAAG2:
+        # data-term variance reduction + EXACT regularizer gradient
+        gd = problem.batch_grad_data(w, Xb, yb)
+        gd_snap = problem.batch_grad_data(state.snapshot, Xb, yb)
+        v = gd - gd_snap + state.snapshot_grad + problem.reg * w
+        new_state = state
+
+    else:
+        raise ValueError(f"unknown solver {solver!r}")
+
+    alpha = _pick_step(problem, cfg, w, v, g, Xb, yb)
+    return new_state._replace(w=w - alpha * v)
+
+
+def epoch_begin(problem: ERMProblem, cfg: SolverConfig, state: SolverState,
+                full_grad_at: Callable[[jax.Array], jax.Array]) -> SolverState:
+    """Refresh epoch-level memory. ``full_grad_at`` computes the full (or
+    data-term, for SAAG-II) gradient — injected so host mode can stream it."""
+    if not _needs_snapshot(cfg.solver):
+        return state
+    return state._replace(snapshot=state.w, snapshot_grad=full_grad_at(state.w))
+
+
+# ---------------------------------------------------------------------------
+# device-resident jit'd runner
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("problem", "cfg", "scheme", "batch_size"))
+def _run_one_epoch(problem: ERMProblem, cfg: SolverConfig, scheme: str,
+                   batch_size: int, state: SolverState, X: jax.Array,
+                   y: jax.Array, key: jax.Array) -> SolverState:
+    l = X.shape[0]
+    m = samplers.num_batches(l, batch_size)
+
+    if _needs_snapshot(cfg.solver):
+        if cfg.solver == SAAG2:
+            fg = lambda w: problem.batch_grad_data(w, X, y)
+        else:
+            fg = lambda w: problem.full_grad(w, X, y)
+        state = epoch_begin(problem, cfg, state, fg)
+
+    contiguous = scheme in (samplers.CYCLIC, samplers.SYSTEMATIC)
+    if contiguous:
+        starts = samplers.batch_slice_starts(scheme, key, l, batch_size)
+    else:
+        idx_mat = samplers.epoch_indices(scheme, key, l, batch_size)
+
+    def body(st, j):
+        if contiguous:
+            # ONE contiguous block read per batch (CS/SS access pattern).
+            Xb = jax.lax.dynamic_slice(X, (starts[j], 0), (batch_size, X.shape[1]))
+            yb = jax.lax.dynamic_slice(y, (starts[j],), (batch_size,))
+        else:
+            # scattered row gather (RS access pattern)
+            Xb, yb = gather_batch(X, y, idx_mat[j])
+        return batch_step(problem, cfg, st, Xb, yb, j), None
+
+    state, _ = jax.lax.scan(body, state, jnp.arange(m))
+    return state
+
+
+def run(problem: ERMProblem, cfg: SolverConfig, scheme: str, X: jax.Array,
+        y: jax.Array, w0: jax.Array, *, batch_size: int, epochs: int,
+        seed: int = 0, record_objective: bool = True,
+        ) -> Tuple[jax.Array, jnp.ndarray]:
+    """Run `epochs` epochs; returns (w, per-epoch objective history)."""
+    l = X.shape[0]
+    m = samplers.num_batches(l, batch_size)
+    state = init_state(cfg.solver, w0, m)
+    key = jax.random.PRNGKey(seed)
+    hist = []
+    obj = jax.jit(lambda w: problem.objective(w, X, y))
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        state = _run_one_epoch(problem, cfg, scheme, batch_size, state, X, y, sub)
+        if record_objective:
+            hist.append(obj(state.w))
+    history = jnp.stack(hist) if hist else jnp.zeros((0,), X.dtype)
+    return state.w, history
+
+
+# ---------------------------------------------------------------------------
+# host-driven mode (memmapped data; the paper's actual regime)
+# ---------------------------------------------------------------------------
+
+def make_step_fn(problem: ERMProblem, cfg: SolverConfig):
+    """jit'd (state, Xb, yb, j) -> state, for host loops that stream batches."""
+    @jax.jit
+    def step(state: SolverState, Xb: jax.Array, yb: jax.Array,
+             j: jax.Array) -> SolverState:
+        return batch_step(problem, cfg, state, Xb, yb, j)
+    return step
+
+
+def streaming_full_grad(problem: ERMProblem, w, batch_iter, *, data_term_only=False):
+    """Full gradient accumulated over streamed (Xb, yb, weight) batches."""
+    gfun = problem.batch_grad_data if data_term_only else problem.batch_grad
+    acc = jnp.zeros_like(w)
+    total = 0
+    for Xb, yb in batch_iter:
+        acc = acc + gfun(w, jnp.asarray(Xb), jnp.asarray(yb)) * Xb.shape[0]
+        total += Xb.shape[0]
+    return acc / total
+
+
+def theoretical_rate(alpha: float, mu: float) -> float:
+    """Per-epoch contraction factor (1 - 2*alpha*mu) from Theorem 1."""
+    return 1.0 - 2.0 * alpha * mu
+
+
+def error_floor(alpha: float, L: float, mu: float, R0: float) -> float:
+    """Asymptotic suboptimality bound L*alpha*R0^2 / (4 mu) from Theorem 1."""
+    return L * alpha * R0 ** 2 / (4.0 * mu)

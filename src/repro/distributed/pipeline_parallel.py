@@ -1,0 +1,84 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+The layer stack is split into S contiguous stages along a "pipe" mesh axis;
+microbatches stream through with the classic GPipe schedule (S + M - 1
+ticks). Activations hop stages with ``jax.lax.ppermute`` — the TPU-native
+equivalent of NCCL send/recv — and every device runs the same SPMD program,
+selecting its stage's parameter slice.
+
+This is an optional execution mode: the production dry-run uses FSDP+TP
+(which fits every assigned config); PP is provided (and tested on a small
+mesh) for depth-dominated models where per-layer FSDP all-gathers would
+dominate the collective term — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_forward(layer_fn: Callable, params_stacked, x, *, mesh: Mesh,
+                     axis: str = "pipe", microbatches: int = 0):
+    """Apply n_layers of ``layer_fn`` with the stack split over `axis`.
+
+    params_stacked: pytree with leading dim n_layers (scan-stacked — same
+    layout as the FSDP path, so configs can flip modes). x: (batch, ...).
+    """
+    S = mesh.shape[axis]
+    M = microbatches or S
+    b = x.shape[0]
+    assert b % M == 0, (b, M)
+    n_layers = jax.tree.leaves(params_stacked)[0].shape[0]
+    assert n_layers % S == 0, (n_layers, S)
+    per_stage = n_layers // S
+
+    staged = jax.tree.map(
+        lambda p: p.reshape((S, per_stage) + p.shape[1:]), params_stacked)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P()),        # params sharded by stage, x replicated
+        out_specs=P(),
+        check_rep=False)
+    def run(params_s, x_rep):
+        params_my = jax.tree.map(lambda p: p[0], params_s)
+        stage = jax.lax.axis_index(axis)
+        mb = x_rep.reshape((M, b // M) + x_rep.shape[1:])
+
+        def stage_apply(h):
+            def body(carry, lp):
+                return layer_fn(carry, lp), None
+            out, _ = jax.lax.scan(body, h, params_my)
+            return out
+
+        perm = [(i, (i + 1) % S) for i in range(S)]
+
+        def tick(carry, t):
+            out, inflight = carry
+            inject = mb[jnp.clip(t, 0, M - 1)]
+            take_inject = jnp.logical_and(stage == 0, t < M)
+            cur = jnp.where(take_inject, inject, inflight)
+            cur = stage_apply(cur)
+            out_t = t - (S - 1)
+            write = jnp.logical_and(stage == S - 1,
+                                    jnp.logical_and(out_t >= 0, out_t < M))
+            out = jnp.where(write,
+                            out.at[jnp.clip(out_t, 0, M - 1)].set(cur), out)
+            inflight = jax.lax.ppermute(cur, axis, perm)
+            return (out, inflight), None
+
+        out0 = jnp.zeros_like(mb)
+        inflight0 = jnp.zeros_like(mb[0])
+        (out, _), _ = jax.lax.scan(tick, (out0, inflight0),
+                                   jnp.arange(M + S - 1))
+        # broadcast the last stage's results to every member
+        out = jax.lax.psum(
+            jnp.where(stage == S - 1, out, jnp.zeros_like(out)), axis)
+        return out.reshape(x_rep.shape)
+
+    return run(staged, x)

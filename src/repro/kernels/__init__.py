@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+  sampled_gather  the paper's contribution at the HBM->VMEM tier
+  flash_attention online-softmax attention for the GQA archs
+  ssd             Mamba2 state-space-dual chunked scan
+  rglru_scan      RecurrentGemma RG-LRU linear recurrence
+
+Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+EXAMPLE.md documents the layout convention.
+"""

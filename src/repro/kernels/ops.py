@@ -1,0 +1,46 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container, and any test environment) the kernels execute in
+interpret mode — the kernel body runs in Python per grid step against the
+same BlockSpec tiling, so correctness of the TPU program is what's being
+validated. On TPU backends the same call sites compile the real kernels.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import flash_attention as _fa
+from . import rglru_scan as _rg
+from . import sampled_gather as _sg
+from . import ssd as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def block_gather(data, block_idx, *, batch_size: int):
+    """Contiguous mini-batch fetch (CS/SS access pattern): ONE block DMA."""
+    return _sg.block_gather(data, block_idx, batch_size=batch_size,
+                            interpret=_interpret())
+
+
+def random_gather(data, idx):
+    """Scattered mini-batch fetch (RS access pattern): one DMA per row."""
+    return _sg.random_gather(data, idx, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 256):
+    return _ssd.ssd(x, dt, A, B, C, chunk=chunk, interpret=_interpret())
+
+
+def rglru(log_a, gated_x, *, chunk: int = 128, block_w: int = 512):
+    return _rg.rglru(log_a, gated_x, chunk=chunk, block_w=block_w,
+                     interpret=_interpret())

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every kernel (the allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def block_gather(data, block_idx, batch_size: int):
+    start = block_idx * batch_size
+    return jax.lax.dynamic_slice(data, (start, 0), (batch_size, data.shape[1]))
+
+
+def random_gather(data, idx):
+    return jnp.take(data, idx, axis=0)
+
+
+def attention(q, k, v, *, causal=True, window=0):
+    """q: (b, sq, hq, d); k/v: (b, skv, hkv, d). fp32 softmax reference."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def ssd(x, dt, A, B, C, chunk: int):
+    """Chunked SSD oracle — delegates to the model's reference
+    implementation (itself validated against a naive recurrence here)."""
+    from ..models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, B, C, chunk)
+
+
+def ssd_naive(x, dt, A, B, C):
+    """O(s) recurrent reference for SSD: the ground truth the chunked form
+    must match. x: (b, s, h, p); dt: (b, s, h); A: (h,); B/C: (b, s, n)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp            # (b,h,p), (b,h), (b,n), (b,n)
+        dA = jnp.exp(dtt * A)            # (b,h)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n), x.dtype)
+    _, ys = jax.lax.scan(step, state0,
+                         (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                          B.swapaxes(0, 1), C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)             # (b, s, h, p)
+
+
+def rglru(log_a, gated_x):
+    """Associative-scan reference for the RG-LRU recurrence."""
+    from ..models.rglru import rglru_scan
+    return rglru_scan(gated_x, log_a, gated_x)
+
+
+def rglru_naive(log_a, gated_x):
+    """Sequential reference: h_t = exp(log_a_t) h_{t-1} + b_t."""
+    def step(h, inp):
+        la, bb = inp
+        h = jnp.exp(la) * h + bb
+        return h, h
+
+    b, s, w = log_a.shape
+    h0 = jnp.zeros((b, w), log_a.dtype)
+    _, hs = jax.lax.scan(step, h0,
+                         (log_a.swapaxes(0, 1), gated_x.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,64 @@
+"""RG-LRU linear recurrence Pallas kernel (RecurrentGemma).
+
+The recurrence h_t = a_t * h_{t-1} + b_t is sequential in time but fully
+parallel across channels and batch, so the kernel tiles (batch, width) across
+the parallel grid axes and walks seq chunks on the sequential axis, carrying
+h in VMEM scratch. Inside a chunk the recurrence runs as a fori_loop of
+elementwise VPU ops over the (1, width_block) lanes — the idiomatic TPU
+shape for LRU-family models (no MXU work exists to exploit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(la_ref, b_ref, o_ref, h_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    la = la_ref[0].astype(jnp.float32)        # (chunk, wb)
+    bb = b_ref[0].astype(jnp.float32)         # (chunk, wb)
+
+    def step(t, h):
+        h = jnp.exp(la[t]) * h + bb[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru(log_a, gated_x, *, chunk: int = 128, block_w: int = 512,
+          interpret: bool = False):
+    """log_a, gated_x: (b, s, w) float. Returns h: (b, s, w)."""
+    b, s, w = log_a.shape
+    chunk = min(chunk, s)
+    block_w = min(block_w, w)
+    assert s % chunk == 0 and w % block_w == 0
+    nc, nw = s // chunk, w // block_w
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk),
+        grid=(b, nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_w), lambda ib, iw, ic: (ib, ic, iw)),
+            pl.BlockSpec((1, chunk, block_w), lambda ib, iw, ic: (ib, ic, iw)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_w),
+                               lambda ib, iw, ic: (ib, ic, iw)),
+        out_shape=jax.ShapeDtypeStruct((b, s, w), gated_x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(log_a, gated_x)
+    return out

@@ -1,0 +1,77 @@
+"""Mini-batch assembly kernels — the paper's contribution at the HBM tier.
+
+Two access patterns, mirroring §2 of the paper:
+
+* :func:`block_gather_kernel` (CS/SS): the mini-batch is one contiguous
+  block of rows. The scalar-prefetched block index feeds the BlockSpec
+  index_map, so the whole batch arrives in VMEM as **one** block DMA —
+  grid size 1. This is the TPU analogue of "one seek per mini-batch".
+
+* :func:`random_gather_kernel` (RS): every row lands in its own grid step —
+  **b** separate row DMAs driven by the prefetched index vector. The DMA
+  descriptor count is the kernel-level expression of the paper's
+  per-element seek/latency cost.
+
+Both kernels produce identical bytes for identical index sets; what differs
+is the *structure* of the access — which is exactly the paper's point.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, x_ref, o_ref):
+    # the DMA did the work; the body is a VMEM-to-VMEM copy
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size", "interpret"))
+def block_gather(data: jax.Array, block_idx: jax.Array, *, batch_size: int,
+                 interpret: bool = False) -> jax.Array:
+    """data: (l, n); block_idx: scalar int32 (mini-batch number, row
+    start = block_idx * batch_size). Returns (batch_size, n).
+
+    One grid step, one (batch_size, n) block DMA: contiguous access (CS/SS).
+    """
+    l, n = data.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((batch_size, n),
+                               lambda i, idx_ref: (idx_ref[0], 0))],
+        out_specs=pl.BlockSpec((batch_size, n), lambda i, idx_ref: (0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch_size, n), data.dtype),
+        interpret=interpret,
+    )(block_idx.reshape(1), data)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def random_gather(data: jax.Array, idx: jax.Array, *,
+                  interpret: bool = False) -> jax.Array:
+    """data: (l, n); idx: (b,) int32 row ids. Returns (b, n).
+
+    Grid of b steps, one (1, n) row DMA each: scattered access (RS).
+    """
+    l, n = data.shape
+    b = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), data.dtype),
+        interpret=interpret,
+    )(idx, data)

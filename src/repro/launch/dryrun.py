@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real program (train_step with AdamW, prefill,
+or decode_step), resolves parameter/batch/cache shardings through the logical
+rule tables, lowers under the production mesh, compiles with the SPMD
+partitioner, and records memory analysis, HLO cost analysis and per-kind
+collective traffic to a JSON artifact consumed by the roofline benchmark.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--continue-on-error]
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..distributed import sharding
+from ..launch import mesh as mesh_lib
+from ..launch.hlo_analysis import (Roofline, collective_bytes, cost_dict,
+                                   memory_dict)
+from ..models import model_api
+from ..models.config import ModelConfig, active_param_count, param_count
+from ..optim.adamw import AdamW
+from ..train.train_loop import make_train_step
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _spec_leaf(x):
+    return isinstance(x, jax.sharding.NamedSharding)
+
+
+def build_programs(cfg: ModelConfig, shape: model_api.ShapeSpec, mesh,
+                   rules=None, microbatches: int = 1):
+    """Returns (fn, arg_specs, arg_shardings, donate) for the cell."""
+    fam = model_api.family(cfg)
+    notes = []
+    rules = rules or sharding.DEFAULT_RULES
+
+    params_shape = jax.eval_shape(lambda k: fam.init(k, cfg),
+                                  jax.random.PRNGKey(0))
+    param_sh = sharding.named_shardings(params_shape, mesh, rules, notes)
+    batch_specs = model_api.input_specs(cfg, shape)
+
+    scalar_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    if shape.kind == model_api.TRAIN:
+        opt = AdamW()
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        opt_sh = sharding.named_shardings(opt_shape, mesh, rules, notes)
+        batch_sh = sharding.data_shardings(batch_specs, mesh, rules, notes)
+        step = make_train_step(cfg, opt, microbatches=microbatches,
+                               grad_shardings=param_sh)
+        # out shardings == in shardings so donation aliases params/opt state
+        return (step, (params_shape, opt_shape, batch_specs),
+                (param_sh, opt_sh, batch_sh),
+                (scalar_sh, param_sh, opt_sh), (0, 1), notes)
+
+    if shape.kind == model_api.PREFILL:
+        batch_sh = sharding.data_shardings(batch_specs, mesh, rules, notes)
+
+        def prefill_fn(params, batch):
+            return fam.prefill(params, cfg, batch)
+
+        out_shape = jax.eval_shape(prefill_fn, params_shape, batch_specs)
+        out_sh = sharding.data_shardings(out_shape[1], mesh, rules, notes)
+        logits_sh = jax.sharding.NamedSharding(
+            mesh, sharding.resolve_spec(("batch", None, None),
+                                        out_shape[0].shape, mesh, rules, notes))
+        return (prefill_fn, (params_shape, batch_specs),
+                (param_sh, batch_sh), (logits_sh, out_sh), (), notes)
+
+    # decode
+    tok_spec = batch_specs["tokens"]
+    pos_spec = batch_specs["pos"]
+    cache_spec = batch_specs["cache"]
+    tok_sh = sharding.data_shardings({"tokens": tok_spec}, mesh, rules,
+                                     notes)["tokens"]
+    pos_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    cache_sh = sharding.data_shardings(cache_spec, mesh, rules, notes)
+
+    def decode_fn(params, tokens, pos, cache):
+        return fam.decode_step(params, cfg, tokens, pos, cache)
+
+    out_shape = jax.eval_shape(decode_fn, params_shape, tok_spec, pos_spec,
+                               cache_spec)
+    logits_sh = jax.sharding.NamedSharding(
+        mesh, sharding.resolve_spec(("batch", None, None),
+                                    out_shape[0].shape, mesh, rules, notes))
+    # cache is donated; identical out sharding makes it alias in place
+    return (decode_fn, (params_shape, tok_spec, pos_spec, cache_spec),
+            (param_sh, tok_sh, pos_sh, cache_sh),
+            (logits_sh, cache_sh), (3,), notes)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules=None, microbatches: int = 1, save: bool = True,
+             tag: str = "", overrides: dict = None) -> dict:
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = model_api.SHAPES[shape_name]
+    skip = model_api.supports(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "tag": tag,
+        "params": param_count(cfg), "active_params": active_param_count(cfg),
+    }
+    if skip:
+        result.update(status="skip", reason=skip)
+        _save(result, save)
+        return result
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        with sharding.use_sharding(mesh, rules):
+            fn, arg_shapes, arg_sh, out_sh, donate, notes = build_programs(
+                cfg, shape, mesh, rules, microbatches)
+            lowered = jax.jit(fn, in_shardings=arg_sh, out_shardings=out_sh,
+                              donate_argnums=donate).lower(*arg_shapes)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    except Exception as e:
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        _save(result, save)
+        return result
+
+    mem = memory_dict(compiled)
+    cost = cost_dict(compiled)
+    hlo = compiled.as_text()
+    # loop-aware graph analysis: xla cost_analysis counts while bodies once,
+    # which under-counts scanned models by ~n_layers (see hlo_cost.py).
+    from ..launch import hlo_cost
+    graph = hlo_cost.analyze(hlo, chips)
+    roof = Roofline(
+        chips=chips,
+        flops=graph["flops"],
+        hbm_bytes=graph["bytes"],
+        ici_bytes_per_chip=graph["ici_total"],
+        peak_flops=mesh_lib.PEAK_FLOPS_BF16,
+        hbm_bw=mesh_lib.HBM_BW,
+        ici_bw=mesh_lib.ICI_BW,
+    )
+    result.update(
+        status="ok",
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=mem, cost_analysis_raw=cost,
+        collectives={"bytes_by_kind": graph["ici_by_kind"],
+                     "op_counts": graph["ici_counts"]},
+        roofline=roof.as_dict(),
+        sharding_notes=sorted(set(notes))[:40],
+        hlo_bytes=len(hlo),
+    )
+    # MODEL_FLOPS = 6*N*D (x3 for train fwd+bwd at 2x fwd)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                   (shape.seq_len if shape.kind == "prefill" else 1))
+    n_active = active_param_count(cfg)
+    mult = 3.0 if shape.kind == "train" else 1.0
+    model_flops = 2.0 * n_active * tokens * mult
+    result["model_flops"] = model_flops
+    total_hlo_flops = roof.flops * chips
+    result["useful_fraction"] = ((model_flops / total_hlo_flops)
+                                 if total_hlo_flops else None)
+    _save(result, save)
+    return result
+
+
+def _save(result: dict, save: bool):
+    if not save:
+        return
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    tag = f"__{result['tag']}" if result.get("tag") else ""
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}{tag}.json"
+    (ARTIFACT_DIR / name).write_text(json.dumps(result, indent=2))
+
+
+def all_cells():
+    for arch in configs.ARCH_IDS:
+        for shape_name in model_api.SHAPES:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", choices=list(model_api.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell in a subprocess each")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch, shape_name in all_cells():
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape_name]
+            if args.multi_pod:
+                cmd.append("--multi-pod")
+            rc = subprocess.call(cmd)
+            if rc != 0:
+                failures.append((arch, shape_name))
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        return
+
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape required (or --all)")
+    res = run_cell(args.arch, args.shape, args.multi_pod,
+                   microbatches=args.microbatches, tag=args.tag)
+    status = res["status"]
+    if status == "ok":
+        r = res["roofline"]
+        print(f"[dryrun] {res['arch']} {res['shape']} {res['mesh']} OK "
+              f"compile={res['compile_s']}s flops={r['flops']:.3e} "
+              f"hbm={r['hbm_bytes']:.3e} ici/chip={r['ici_bytes_per_chip']:.3e} "
+              f"dominant={r['dominant']} step~{r['step_s']*1e3:.2f}ms "
+              f"useful={res['useful_fraction'] and round(res['useful_fraction'],3)}")
+        mem = res.get("memory") or {}
+        if mem:
+            print("  memory:", {k: f"{v/2**30:.2f}GiB" for k, v in mem.items()})
+    elif status == "skip":
+        print(f"[dryrun] {res['arch']} {res['shape']} {res['mesh']} "
+              f"SKIP: {res['reason']}")
+    else:
+        print(f"[dryrun] {res['arch']} {res['shape']} {res['mesh']} "
+              f"ERROR: {res['error']}")
+        print(res.get("traceback", ""))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,424 @@
+"""Loop-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — for
+scan-over-layers models that under-counts FLOPs/bytes by ~n_layers, and the
+same bug hides per-layer FSDP all-gathers from the collective tally. This
+module parses the optimized HLO text into its computation graph and walks it
+with trip-count multipliers (from ``backend_config known_trip_count``,
+falling back to condition-computation constants).
+
+Counting rules (documented because the roofline reads from them):
+  flops   dot: 2*prod(out)*prod(contracted); other non-trivial ops:
+          1 flop/output element (elementwise estimate).
+  bytes   per top-level op: operands + results, EXCEPT fusion internals
+          (on-chip), parameter/constant/tuple/gte/bitcast (no HBM traffic),
+          and dynamic-(update-)slice which touch only the slice region.
+  ici     per-device collective traffic with ring multipliers (see
+          hlo_analysis.collective_bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .hlo_analysis import DTYPE_BYTES, COLLECTIVES
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{")
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?)\s*"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^\}]*\})?")
+_TRIP_RE = re.compile(r'known_trip_count[\\"\s:{]+n[\\"\s:]+(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "iota", "after-all", "partition-id", "replica-id", "rng-bit-generator"}
+_FLOW = {"fusion", "while", "call", "conditional", "custom-call"}
+
+
+def _parse_type(ts: str) -> Tuple[str, int]:
+    m = _TYPE_RE.search(ts)
+    if not m:
+        return ("", 0)
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return dt, n
+
+
+def _type_bytes(ts: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(ts):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _elems(ts: str) -> int:
+    dt, n = _parse_type(ts)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str           # operand list + attrs (raw tail of the line)
+
+    def operand_names(self) -> List[str]:
+        depth = 0
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args = self.rest[:i]
+                    break
+                depth -= 1
+        else:
+            args = self.rest
+        names = []
+        for tok in args.split(","):
+            tok = tok.strip()
+            m = re.match(r"%?([\w\.\-]+)$", tok)
+            if m:
+                names.append(m.group(1))
+        return names
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    ici: Optional[Dict[str, float]] = None
+    ici_counts: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.ici is None:
+            self.ici = {k: 0.0 for k in COLLECTIVES}
+        if self.ici_counts is None:
+            self.ici_counts = {k: 0.0 for k in COLLECTIVES}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVES:
+            self.ici[k] += other.ici[k] * mult
+            self.ici_counts[k] += other.ici_counts[k] * mult
+
+
+# Ops the TPU backend fuses into neighbours (VPU work, no HBM round-trip).
+# XLA:CPU materialises these — especially bf16 ops, which FloatNormalization
+# rewrites to convert/f32-op/convert — so counting them models a CPU, not the
+# TPU target. "tpu" accounting counts only materialisation boundaries:
+# dots/convs/reduces (operands+result), copies (layout moves), slicing,
+# collectives, and loop-carried traffic.
+_TPU_FUSED = {
+    "add", "subtract", "multiply", "divide", "power", "exponential", "tanh",
+    "logistic", "log", "log-plus-one", "exponential-minus-one", "rsqrt",
+    "sqrt", "negate", "abs", "sign", "floor", "ceil", "round-nearest-afz",
+    "convert", "select", "compare", "maximum", "minimum", "and", "or", "not",
+    "xor", "broadcast", "transpose", "reshape", "reverse", "iota", "pad",
+    "clamp", "reduce-precision", "rng-bit-generator", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "popcnt",
+}
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, total_devices: int, mode: str = "tpu"):
+        self.total_devices = total_devices
+        self.mode = mode
+        self.comps: Dict[str, List[Op]] = {}
+        self.types: Dict[Tuple[str, str], str] = {}  # (comp, op) -> type
+        self.entry: Optional[str] = None
+        self._memo: Dict[str, Cost] = {}
+        self._parse(hlo_text)
+
+    # ---- parsing ----------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        comment = re.compile(r"/\*.*?\*/")
+        for raw in text.splitlines():
+            line = comment.sub("", raw).rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and line.endswith("{"):
+                m = _COMP_HEADER.match(line.strip())
+                if m:
+                    is_entry, name, args = m.groups()
+                    cur = name
+                    self.comps[cur] = []
+                    if is_entry:
+                        self.entry = name
+                    # header params carry types: "p0: f32[8,2], p1: s32[]"
+                    for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^\)]*\))|"
+                                          r"(?:\w+\[[\d,]*\]))", args):
+                        self.types[(cur, pm.group(1))] = pm.group(2)
+                    continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            _, name, rtype, opcode, rest = m.groups()
+            op = Op(name, rtype.strip(), opcode, rest)
+            self.comps[cur].append(op)
+            self.types[(cur, name)] = rtype.strip()
+
+    def _operand_type(self, comp: str, name: str) -> str:
+        return self.types.get((comp, name), "")
+
+    def _fusion_kind(self, op: Op) -> str:
+        """'elementwise' if all inner ops fuse; 'dus' if the only non-fusible
+        inner ops are dynamic-update-slices; else 'boundary'."""
+        has_dus = False
+        for m in _CALLS_RE.finditer(op.rest):
+            for inner in self.comps.get(m.group(1), []):
+                if inner.opcode == "dynamic-update-slice":
+                    has_dus = True
+                elif inner.opcode in ("copy", "dynamic-slice", "slice"):
+                    continue  # fused copies/slices don't round-trip HBM
+                elif inner.opcode not in _TPU_FUSED and \
+                        inner.opcode not in _NO_BYTES:
+                    return "boundary"
+        return "dus" if has_dus else "elementwise"
+
+    def _fusion_dus_bytes(self, op: Op) -> float:
+        total = 0.0
+        for m in _CALLS_RE.finditer(op.rest):
+            comp = m.group(1)
+            for inner in self.comps.get(comp, []):
+                if inner.opcode == "dynamic-update-slice":
+                    names = inner.operand_names()
+                    upd = (_type_bytes(self._operand_type(comp, names[1]))
+                           if len(names) > 1 else 0)
+                    total += 2.0 * upd
+        return total
+
+    def _trip_count(self, op: Op, cond_name: Optional[str]) -> float:
+        m = _TRIP_RE.search(op.rest)
+        if m:
+            return float(m.group(1))
+        # fallback: largest integer constant in the condition computation
+        best = 1.0
+        if cond_name and cond_name in self.comps:
+            for o in self.comps[cond_name]:
+                if o.opcode == "constant":
+                    cm = re.match(r"\s*(\d+)\s*\)", o.rest)
+                    if cm:
+                        best = max(best, float(cm.group(1)))
+        return best
+
+    # ---- cost -------------------------------------------------------------
+    def cost(self, comp: Optional[str] = None) -> Cost:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        self._memo[comp] = total  # break cycles defensively
+        for op in self.comps.get(comp, []):
+            self._op_cost(comp, op, total)
+        return total
+
+    def _op_cost(self, comp: str, op: Op, total: Cost):
+        oc = op.opcode
+        if oc in _NO_BYTES:
+            return
+        out_bytes = _type_bytes(op.result_type)
+        operand_bytes = sum(_type_bytes(self._operand_type(comp, n))
+                            for n in op.operand_names())
+
+        # collectives ---------------------------------------------------
+        base = oc[:-6] if oc.endswith("-start") else oc
+        if base in COLLECTIVES:
+            if oc.endswith("-done"):
+                return
+            from .hlo_analysis import _group_size
+            n = max(_group_size(op.rest, self.total_devices), 1)
+            frac = (n - 1) / n
+            size = out_bytes
+            if base == "all-gather":
+                moved = size * frac
+            elif base == "all-reduce":
+                moved = 2.0 * size * frac
+            elif base == "reduce-scatter":
+                moved = size * (n - 1)
+            elif base == "all-to-all":
+                moved = size * frac
+            else:
+                moved = float(size)
+            total.ici[base] += moved
+            total.ici_counts[base] += 1
+            total.bytes += out_bytes + operand_bytes
+            return
+
+        # control flow ----------------------------------------------------
+        if oc == "while":
+            body = None
+            cond = None
+            bm = re.search(r"body=%?([\w\.\-]+)", op.rest)
+            cm = _COND_RE.search(op.rest)
+            body = bm.group(1) if bm else None
+            cond = cm.group(1) if cm else None
+            trip = self._trip_count(op, cond)
+            if body:
+                total.add(self.cost(body), trip)
+            if cond:
+                total.add(self.cost(cond), trip)
+            return
+        if oc in ("call", "fusion", "conditional", "custom-call", "reduce",
+                  "reduce-window", "sort", "scatter", "select-and-scatter",
+                  "map"):
+            sub = Cost()
+            for m in _CALLS_RE.finditer(op.rest):
+                sub_name = m.group(1)
+                if sub_name in self.comps:
+                    sub.add(self.cost(sub_name))
+            if oc == "fusion":
+                # internal bytes are on-chip; keep internal flops
+                total.flops += sub.flops
+                if self.mode == "tpu":
+                    kind = self._fusion_kind(op)
+                    if kind == "elementwise":
+                        # XLA:CPU wraps single elementwise ops in kLoop
+                        # fusions ("wrapped_add") and splits chains the TPU
+                        # backend would fuse through — not an HBM boundary.
+                        return
+                    if kind == "dus":
+                        # in-place cache update: only the slice moves
+                        total.bytes += self._fusion_dus_bytes(op)
+                        return
+                total.bytes += out_bytes + operand_bytes
+            elif oc == "conditional":
+                total.add(sub)  # upper bound: all branches
+                total.bytes += out_bytes
+            elif oc in ("reduce", "reduce-window", "map", "sort"):
+                total.flops += _elems_of(op.result_type) + 0.0
+                total.bytes += out_bytes + operand_bytes
+            else:
+                total.add(sub)
+                total.bytes += out_bytes + operand_bytes
+            return
+
+        # dots ------------------------------------------------------------
+        if oc == "dot":
+            out_elems = _elems_of(op.result_type)
+            contracted = 1
+            cm = _CONTRACT_RE.search(op.rest)
+            lhs_type = self._operand_type(comp, op.operand_names()[0]) \
+                if op.operand_names() else ""
+            if cm and lhs_type:
+                dims_m = _TYPE_RE.search(lhs_type)
+                if dims_m:
+                    dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                    for idx in cm.group(1).split(","):
+                        if idx:
+                            i = int(idx)
+                            if i < len(dims):
+                                contracted *= dims[i]
+            total.flops += 2.0 * out_elems * contracted
+            total.bytes += out_bytes + operand_bytes
+            return
+
+        if oc == "convolution":
+            # rough: 2 * out_elems * kernel_elems (kernel = operand 1)
+            k_type = (self._operand_type(comp, op.operand_names()[1])
+                      if len(op.operand_names()) > 1 else "")
+            total.flops += 2.0 * _elems_of(op.result_type) * max(_elems_of(k_type), 1)
+            total.bytes += out_bytes + operand_bytes
+            return
+
+        # slicing touches only the moved region ----------------------------
+        if oc in ("dynamic-slice", "slice", "gather"):
+            total.bytes += 2.0 * out_bytes
+            return
+        if oc in ("dynamic-update-slice",):
+            upd = (_type_bytes(self._operand_type(comp, op.operand_names()[1]))
+                   if len(op.operand_names()) > 1 else out_bytes)
+            total.bytes += 2.0 * upd
+            return
+
+        # everything else: elementwise estimate ----------------------------
+        total.flops += float(_elems_of(op.result_type))
+        if self.mode == "tpu" and oc in _TPU_FUSED:
+            return  # fuses on the TPU target: no HBM round-trip
+        total.bytes += out_bytes + operand_bytes
+
+
+def _elems_of(ts: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(ts):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def analyze(hlo_text: str, total_devices: int, mode: str = "tpu") -> Dict:
+    model = HloCostModel(hlo_text, total_devices, mode=mode)
+    c = model.cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "ici_by_kind": dict(c.ici),
+        "ici_counts": dict(c.ici_counts),
+        "ici_total": sum(c.ici.values()),
+    }
+
+
+def top_contributors(hlo_text: str, total_devices: int, n: int = 30,
+                     key: str = "bytes"):
+    """Per-op traffic/flops attribution with loop multipliers, for §Perf
+    profiling: returns [(comp, op_name_prefix, opcode, bytes, flops), ...]."""
+    model = HloCostModel(hlo_text, total_devices)
+
+    # compute loop multiplier per computation by walking from entry
+    mult: Dict[str, float] = {}
+
+    def walk(comp: str, m: float):
+        mult[comp] = mult.get(comp, 0.0) + m
+        for op in model.comps.get(comp, []):
+            if op.opcode == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                cm = _COND_RE.search(op.rest)
+                trip = model._trip_count(op, cm.group(1) if cm else None)
+                if bm:
+                    walk(bm.group(1), m * trip)
+            elif op.opcode in ("call", "fusion", "conditional", "custom-call"):
+                for mm in _CALLS_RE.finditer(op.rest):
+                    if mm.group(1) in model.comps:
+                        walk(mm.group(1), m)
+
+    walk(model.entry, 1.0)
+    rows = []
+    for comp, m in mult.items():
+        for op in model.comps[comp]:
+            if op.opcode in ("fusion", "while", "call"):
+                oc = op.opcode
+                if oc != "fusion":
+                    continue
+            c = Cost()
+            model._op_cost(comp, op, c)
+            if c.bytes or c.flops:
+                meta = re.search(r'op_name="([^"]+)"', op.rest)
+                name = (meta.group(1)[:80] if meta else op.name[:40])
+                rows.append((comp[:40], name, op.opcode, c.bytes * m,
+                             c.flops * m))
+    rows.sort(key=lambda r: -r[3 if key == "bytes" else 4])
+    return rows[:n]

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. The single-pod mesh is 16x16 = 256 chips (one v5e
+pod); the multi-pod mesh adds a leading 2-pod data-parallel axis (512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per chip per direction)
+HBM_BYTES = 16 * 1024 ** 3    # 16 GiB per chip

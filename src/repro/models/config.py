@@ -1,0 +1,150 @@
+"""Unified model configuration for all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+DENSE = "dense"        # llama-style GQA decoder (yi, stablelm, qwen3-4b, qwen2.5)
+MOE = "moe"            # qwen3-moe family
+SSM = "ssm"            # mamba2 (SSD)
+HYBRID = "hybrid"      # recurrentgemma (RG-LRU + local attention)
+ENCODER = "encoder"    # hubert (encoder-only audio backbone)
+VLM = "vlm"            # internvl2 (decoder backbone + patch-embed prefix stub)
+FAMILIES = (DENSE, MOE, SSM, HYBRID, ENCODER, VLM)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    qk_norm: bool = False              # qwen3
+    qkv_bias: bool = False             # qwen2.5
+    rope_theta: float = 1e6
+    attn_window: int = 0               # 0 = global; >0 = local sliding window
+    # mlp
+    d_ff: int = 0
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 1e-3
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    # hybrid (recurrentgemma): layer pattern, e.g. ("rglru","rglru","attn")
+    block_pattern: Tuple[str, ...] = ()
+    lru_width: int = 0                 # 0 -> d_model
+    # modality frontend stubs
+    frontend_dim: int = 0              # hubert frame-embedding dim / vit patch dim
+    n_patches: int = 0                 # vlm: image patch positions (prefix)
+    # numerics / execution
+    param_dtype: str = "float32"
+    activation_dtype: str = "float32"
+    remat: bool = True
+    scan_layers: bool = True
+    attn_impl: str = "xla"             # "xla" | "xla_chunked" | "xla_lean" | "pallas"
+    attn_block: int = 512              # kv block for xla_chunked
+    attn_shard: str = "heads"          # "heads" | "seq": shard s^2 over model
+    moe_grouped: bool = False          # per-batch-row MoE dispatch (see §Perf)
+    moe_combine: str = "gather"        # "gather" | "scatter": see §Perf B3
+    # parallelism-relevant knobs
+    logits_chunk: int = 0              # 0 = single einsum; >0 = chunked logits loss
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def resolved_lru_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.param_dtype)
+
+    def adtype(self) -> jnp.dtype:
+        return jnp.dtype(self.activation_dtype)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Approximate parameter count (used for roofline MODEL_FLOPS=6ND)."""
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    emb = cfg.vocab * d
+    total = emb  # tied head assumed separate below
+    if cfg.family in (DENSE, MOE, VLM, ENCODER):
+        q = d * cfg.n_heads * hd
+        kv = 2 * d * cfg.n_kv_heads * hd
+        o = cfg.n_heads * hd * d
+        attn = q + kv + o
+        if cfg.family == MOE:
+            ffn = cfg.n_experts * 3 * d * cfg.d_ff + d * cfg.n_experts
+        else:
+            ffn = 3 * d * cfg.d_ff
+        total += L * (attn + ffn)
+        if cfg.family != ENCODER:
+            total += emb  # lm head
+        else:
+            total += d * cfg.vocab
+        if cfg.family == VLM:
+            total += cfg.frontend_dim * d  # projector
+        if cfg.family == ENCODER:
+            total += cfg.frontend_dim * d
+    elif cfg.family == SSM:
+        din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        inproj = d * (2 * din + 2 * ns + nh)
+        outproj = din * d
+        total += L * (inproj + outproj + cfg.conv_kernel * (din + 2 * ns) + 3 * nh)
+        total += emb  # head
+    elif cfg.family == HYBRID:
+        w = cfg.resolved_lru_width
+        rec = d * w * 2 + w * d + cfg.conv_kernel * w + 3 * w + 2 * w * w // 8
+        q = d * cfg.n_heads * hd
+        kv = 2 * d * cfg.n_kv_heads * hd
+        attn = q + kv + cfg.n_heads * hd * d
+        ffn = 3 * d * cfg.d_ff
+        n_attn = sum(1 for i in range(L) if _pattern_at(cfg, i) == "attn")
+        total += n_attn * attn + (L - n_attn) * rec + L * ffn
+        total += emb
+    return int(total)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k experts only)."""
+    if cfg.family != MOE:
+        return param_count(cfg)
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    ffn = cfg.top_k * 3 * d * cfg.d_ff + d * cfg.n_experts
+    return int(2 * cfg.vocab * d + L * (attn + ffn))
+
+
+def _pattern_at(cfg: ModelConfig, i: int) -> str:
+    if not cfg.block_pattern:
+        return "attn"
+    return cfg.block_pattern[i % len(cfg.block_pattern)]

@@ -1,0 +1,279 @@
+"""Shared building blocks: RMSNorm, RoPE, GQA attention (+KV cache), SwiGLU.
+
+Pure-function style: every block is ``init(key, cfg, ...) -> params`` plus an
+``apply(params, x, ...)``. Sharding is injected via
+``lax.with_sharding_constraint`` on activations using logical specs resolved
+by :mod:`repro.distributed.sharding` (no-ops outside a mesh context).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from ..distributed.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+
+def he_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / np.sqrt(max(fan_in, 1))).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]                         # broadcast over heads
+    cos = cos[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional qk-norm / qkv-bias / local window / KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig) -> dict:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": he_init(ks[0], (d, nh, hd), dt, fan_in=d),
+        "wk": he_init(ks[1], (d, nkv, hd), dt, fan_in=d),
+        "wv": he_init(ks[2], (d, nkv, hd), dt, fan_in=d),
+        "wo": he_init(ks[3], (nh, hd, d), dt, fan_in=nh * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh, hd), dt)
+        p["bk"] = jnp.zeros((nkv, hd), dt)
+        p["bv"] = jnp.zeros((nkv, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dt)
+        p["k_norm"] = rmsnorm_init(hd, dt)
+    return p
+
+
+def _qkv(params, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, *, causal: bool, q_offset=0,
+          kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q: (b, sq, nh, hd); k/v: (b, skv, nkv, hd). Grouped by repeat."""
+    b, sq, nh, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    qg = q.reshape(b, sq, nkv, group, hd)
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    # masking
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if cfg.attn_window > 0:
+        mask = mask & (kpos[None, :] > qpos[:, None] - cfg.attn_window)
+    if kv_len is not None:  # decode: only first kv_len cache entries valid
+        mask = mask & (kpos[None, :] < kv_len)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, nh, hd)
+
+
+def attention_apply(params, cfg: ModelConfig, x, positions, *, causal=True):
+    """Full-sequence attention (train / prefill). x: (b, s, d)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    if cfg.attn_shard == "seq":
+        # context-parallel attention: shard the s^2 tensors over the model
+        # axis via q's SEQUENCE dim — the right call when n_heads doesn't
+        # divide the TP axis (e.g. qwen2.5's 40 heads on 16): k/v replicate,
+        # softmax is kv-local, and only q/out reshard (§Perf iteration A5).
+        q = constrain(q, ("batch", ("model",), None, None))
+        k = constrain(k, ("batch", None, None, None))
+    else:
+        q = constrain(q, ("batch", "seq", "heads", None))
+        k = constrain(k, ("batch", "seq", None, None))
+    if cfg.attn_impl == "pallas":
+        from ..kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=cfg.attn_window)
+    elif cfg.attn_impl == "xla_chunked":
+        from .chunked_attention import chunked_attention
+        out = chunked_attention(q, k, v, causal=causal,
+                                window=cfg.attn_window,
+                                block=cfg.attn_block)
+    elif cfg.attn_impl == "xla_lean":
+        from .lean_attention import lean_attention
+        out = lean_attention(q, k, v, causal=causal, window=cfg.attn_window)
+    else:
+        out = _sdpa(cfg, q, k, v, causal=causal)
+    if cfg.attn_shard == "seq":
+        out = constrain(out, ("batch", ("model",), None, None))
+    else:
+        out = constrain(out, ("batch", "seq", "heads", None))
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+
+
+def attention_decode(params, cfg: ModelConfig, x, cache: Tuple, pos):
+    """Single-token decode. x: (b, 1, d); cache: (k, v) each
+    (b, max_seq, nkv, hd); pos: scalar next position."""
+    ck, cv = cache
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = _qkv(params, cfg, x, positions)
+    cache_len = ck.shape[1]
+    if cfg.attn_window > 0:
+        # rolling window buffer: write slot cycles; K stored pre-roped at
+        # absolute positions, so attention over valid slots is correct
+        # regardless of buffer order.
+        write = jnp.mod(pos, cache_len)
+        kv_len = jnp.minimum(pos + 1, cache_len)
+    else:
+        write = pos
+        kv_len = pos + 1
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, write, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, write, 0, 0))
+    # window masking beyond kv_len is unnecessary: every resident slot is
+    # within the last `cache_len` positions by construction.
+    out = _sdpa(cfg, q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False,
+                kv_len=kv_len)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, (ck, cv)
+
+
+def attention_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    hd = cfg.resolved_head_dim
+    seq = min(max_seq, cfg.attn_window) if cfg.attn_window > 0 else max_seq
+    shape = (batch, seq, cfg.n_kv_heads, hd)
+    return shape
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = cfg.dtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": he_init(k1, (d, ff), dt),
+        "w_up": he_init(k2, (d, ff), dt),
+        "w_down": he_init(k3, (ff, d), dt, fan_in=ff),
+    }
+
+
+def mlp_apply(params, x):
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / lm head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig) -> dict:
+    dt = cfg.dtype()
+    k1, k2 = jax.random.split(key)
+    return {
+        "tok": (jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02).astype(dt),
+        "head": he_init(k2, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def embed(params, tokens):
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def lm_logits(params, x):
+    return x @ params["head"]
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE. logits: (b, s, V) float; labels: (b, s) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(x, head, labels, mask=None, chunk: int = 0):
+    """CE without materialising the full (b, s, V) logits when chunk>0.
+
+    Computes per-chunk logits -> logsumexp + gold logit, summing losses.
+    Cuts peak activation memory for V~150k vocabs (used by hillclimbing).
+    """
+    if chunk <= 0 or x.shape[1] <= chunk:
+        return cross_entropy(lm_logits({"head": head}, x), labels, mask)
+    b, s, d = x.shape
+    n = s // chunk
+    assert s % chunk == 0, "seq must divide logits_chunk"
+    xs = x.reshape(b, n, chunk, d).swapaxes(0, 1)          # (n, b, c, d)
+    ls = labels.reshape(b, n, chunk).swapaxes(0, 1)        # (n, b, c)
+    ms = None if mask is None else mask.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(carry, xs_i):
+        tot, cnt = carry
+        if ms is None:
+            x_i, l_i = xs_i
+            m_i = jnp.ones(l_i.shape, jnp.float32)
+        else:
+            x_i, l_i, m_i = xs_i
+            m_i = m_i.astype(jnp.float32)
+        logits = (x_i @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m_i
+        return (tot + jnp.sum(nll), cnt + jnp.sum(m_i)), None
+
+    xs_all = (xs, ls) if ms is None else (xs, ls, ms)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs_all)
+    return tot / jnp.maximum(cnt, 1.0)

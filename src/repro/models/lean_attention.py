@@ -1,0 +1,115 @@
+"""Lean attention (attn_impl="xla_lean"): minimal-pass softmax attention.
+
+§Perf iterations A2+A3 for memory-bound attention archs (see EXPERIMENTS.md
+§Perf). Against the baseline `_sdpa` + autodiff (~20 full (sq x skv) fp32
+elementwise passes per layer, counting jvp + remat duplicates):
+
+  * scale folded into q (removes the *scale pass over s^2),
+  * masking by ONE add of a broadcast (sq, skv) bias — no select ops,
+  * the whole s^2 chain is kept in the activation dtype (bf16 in
+    production): the logits matmul emits bf16, exp runs in bf16 with an f32
+    row-max subtracted — flash-kernel numerics,
+  * softmax normalisation deferred past the p@v matmul: out = (pu @ v) / l
+    where l is the (b, n, g, q) row sum — removes the s^2 division pass,
+  * custom VJP recomputes pu from saved f32 (m, l) row stats — residuals
+    are O(s·d) — and uses ds = pu (dp - D) / l, all in bf16.
+
+Exactness: identical math to reference softmax attention; in bf16 the s^2
+chain carries ~3 decimal digits, the same contract as the Pallas flash
+kernel with bf16 inputs and f32 statistics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
+
+
+def _bias(sq: int, skv: int, causal: bool, window: int, q_offset,
+          kv_len, dtype) -> jnp.ndarray:
+    qpos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 1)
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window > 0:
+        ok = ok & (kpos > qpos - window)
+    if kv_len is not None:
+        ok = ok & (kpos < kv_len)
+    # -3e4 fits bf16 (max ~3.39e38, but exp underflow needs only ~ -90);
+    # a large-negative bias keeps masked probs at exactly 0 after exp.
+    neg = jnp.asarray(-30000.0 if dtype == jnp.bfloat16 else NEG, dtype)
+    return jnp.where(ok, jnp.zeros((), dtype), neg)
+
+
+def _pu_stats(q, k, causal, window, q_offset, kv_len):
+    """Unnormalised probs pu (activation dtype) + f32 row stats (m, l)."""
+    s = jnp.einsum("bqngh,bsnh->bngqs", q, k,
+                   preferred_element_type=q.dtype)
+    s = s + _bias(q.shape[1], k.shape[1], causal, window, q_offset, kv_len,
+                  s.dtype)
+    # reduce in the native dtype, cast the SMALL row stats to f32 — never
+    # materialise an f32 copy of the s^2 tensor.
+    m = jnp.max(s, axis=-1).astype(jnp.float32)          # (b,n,g,q) f32
+    pu = jnp.exp(s - m[..., None].astype(s.dtype))       # one bf16 pass
+    l = jnp.sum(pu, axis=-1, dtype=jnp.float32)          # f32-accumulated
+    return pu, m, l
+
+
+def _fwd(q, k, v, causal, window, q_offset, kv_len):
+    pu, m, l = _pu_stats(q, k, causal, window, q_offset, kv_len)
+    u = jnp.einsum("bngqs,bsnh->bqngh", pu, v)           # unnormalised out
+    linv = (1.0 / jnp.maximum(l, 1e-30)).astype(u.dtype)
+    out = u * linv.transpose(0, 3, 1, 2)[..., None]      # small row op
+    return out, m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _lean_core(q, k, v, causal, window, q_offset, kv_len):
+    return _fwd(q, k, v, causal, window, q_offset, kv_len)[0]
+
+
+def _lean_fwd(q, k, v, causal, window, q_offset, kv_len):
+    out, m, l = _fwd(q, k, v, causal, window, q_offset, kv_len)
+    return out, (q, k, v, out, m, l)
+
+
+def _lean_bwd(causal, window, q_offset, kv_len, res, dout):
+    q, k, v, out, m, l = res
+    linv = (1.0 / jnp.maximum(l, 1e-30))                 # (b,n,g,q) f32
+    # recompute unnormalised probs from saved stats (1 dot + 2 passes)
+    pu, _, _ = _pu_stats(q, k, causal, window, q_offset, kv_len)
+    dp = jnp.einsum("bqngh,bsnh->bngqs", dout, v)        # bf16 s^2 dot
+    D = jnp.sum(dout * out, axis=-1,
+                dtype=jnp.float32)                        # (b,q,n,g) f32
+    coef = (D.transpose(0, 2, 3, 1) * linv)              # f32 small
+    # ds = pu * (dp - D) / l, evaluated in the activation dtype
+    ds = pu * (dp * linv[..., None].astype(dp.dtype)
+               - coef[..., None].astype(dp.dtype))
+    dq = jnp.einsum("bngqs,bsnh->bqngh", ds, k)
+    dk = jnp.einsum("bngqs,bqngh->bsnh", ds, q)
+    # dv needs NORMALISED p: pu/l
+    pn = pu * linv[..., None].astype(pu.dtype)
+    dv = jnp.einsum("bngqs,bqngh->bsnh", pn, dout)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_lean_core.defvjp(_lean_fwd, _lean_bwd)
+
+
+def lean_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                   q_offset=0, kv_len=None):
+    """q: (b, sq, hq, hd); k/v: (b, skv, hkv, hd) -> (b, sq, hq, hd).
+
+    Scale is folded into q before the logits matmul.
+    """
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = (q * (1.0 / np.sqrt(hd))).astype(q.dtype).reshape(b, sq, hkv, g, hd)
+    out = _lean_core(qg, k, v, causal, window, q_offset, kv_len)
+    return out.reshape(b, sq, hq, hd)

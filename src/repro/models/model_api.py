@@ -1,0 +1,189 @@
+"""Uniform model API: every family exposes init/loss/prefill/decode_step and
+ShapeDtypeStruct input specs for the (train | prefill | decode) programs.
+
+This is the layer the launcher, dry-run, trainer and server all talk to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import rglru, ssm, transformer
+from .config import DENSE, ENCODER, HYBRID, MOE, SSM, VLM, ModelConfig
+
+TRAIN = "train"
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+    name: str
+    kind: str                 # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+# the assigned shape set for the LM pool
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", TRAIN, 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", PREFILL, 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", DECODE, 32768, 128),
+    "long_500k": ShapeSpec("long_500k", DECODE, 524288, 1),
+}
+
+
+class Family:
+    """Dispatch table per architecture family."""
+
+    def __init__(self, mod, has_decode=True):
+        self.mod = mod
+        self.has_decode = has_decode
+
+    def init(self, key, cfg):
+        return self.mod.init(key, cfg)
+
+    def loss(self, params, cfg, batch):
+        return self.mod.loss_fn(params, cfg, batch)
+
+    def prefill(self, params, cfg, batch, max_seq=None):
+        if max_seq is not None and self.mod in (transformer, rglru):
+            return self.mod.prefill(params, cfg, batch, max_seq=max_seq)
+        return self.mod.prefill(params, cfg, batch)
+
+    def decode_step(self, params, cfg, tokens, pos, cache):
+        return self.mod.decode_step(params, cfg, tokens, pos, cache)
+
+    def cache_spec(self, cfg, batch, max_seq):
+        return self.mod.cache_spec(cfg, batch, max_seq)
+
+    def init_cache(self, cfg, batch, max_seq):
+        return self.mod.init_cache(cfg, batch, max_seq)
+
+
+class _EncoderFamily(Family):
+    """Encoder-only: no autoregressive decode; prefill = full encode."""
+
+    def __init__(self, mod):
+        super().__init__(mod, has_decode=False)
+
+    def prefill(self, params, cfg, batch, max_seq=None):
+        del max_seq
+        from .layers import lm_logits
+        x, pos, _ = transformer._embed_inputs(params, cfg, batch)
+        h, _ = transformer.backbone(params, cfg, x, pos, causal=False)
+        return lm_logits(params["embed"], h), None
+
+    def decode_step(self, *a, **k):
+        raise NotImplementedError("encoder-only architectures do not decode")
+
+    def cache_spec(self, *a, **k):
+        raise NotImplementedError("encoder-only architectures have no cache")
+
+
+FAMILIES: Dict[str, Family] = {
+    DENSE: Family(transformer),
+    MOE: Family(transformer),
+    VLM: Family(transformer),
+    ENCODER: _EncoderFamily(transformer),
+    SSM: Family(ssm),
+    HYBRID: Family(rglru),
+}
+
+
+def family(cfg: ModelConfig) -> Family:
+    return FAMILIES[cfg.family]
+
+
+def supports(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if (cfg, shape) is runnable; otherwise the documented skip reason."""
+    if shape.kind == DECODE and cfg.family == ENCODER:
+        return "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and cfg.family not in (SSM, HYBRID):
+        return ("524k-token decode needs sub-quadratic attention / O(1) state; "
+                "skipped for pure full-attention archs per assignment")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for the given cell as ShapeDtypeStructs.
+
+    train:    the training batch (tokens/frames/patches + labels)
+    prefill:  the request batch (prompt)
+    decode:   one new token + the KV/state cache at seq_len
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    if shape.kind == TRAIN:
+        if cfg.family == ENCODER:
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                   jnp.dtype(cfg.activation_dtype)),
+                    "labels": tok(b, s),
+                    "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_)}
+        if cfg.family == VLM:
+            npatch = cfg.n_patches
+            s_text = s - npatch
+            return {"tokens": tok(b, s_text),
+                    "patches": jax.ShapeDtypeStruct(
+                        (b, npatch, cfg.frontend_dim),
+                        jnp.dtype(cfg.activation_dtype)),
+                    "labels": tok(b, s_text)}
+        return {"tokens": tok(b, s), "labels": tok(b, s)}
+
+    if shape.kind == PREFILL:
+        if cfg.family == ENCODER:
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                   jnp.dtype(cfg.activation_dtype))}
+        if cfg.family == VLM:
+            npatch = cfg.n_patches
+            return {"tokens": tok(b, s - npatch),
+                    "patches": jax.ShapeDtypeStruct(
+                        (b, npatch, cfg.frontend_dim),
+                        jnp.dtype(cfg.activation_dtype))}
+        return {"tokens": tok(b, s)}
+
+    # DECODE: one token + cache of size seq_len
+    fam = family(cfg)
+    return {
+        "tokens": tok(b, 1),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": fam.cache_spec(cfg, b, s),
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, key) -> Dict[str, Any]:
+    """Materialise a random batch matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, shape)
+    ks = jax.random.split(key, 8)
+
+    def mat(i, spec, is_label=False, is_tok=False):
+        if spec.dtype == jnp.int32:
+            hi = cfg.vocab
+            return jax.random.randint(ks[i], spec.shape, 0, hi, jnp.int32)
+        if spec.dtype == jnp.bool_:
+            return jnp.ones(spec.shape, jnp.bool_)
+        return jax.random.normal(ks[i], spec.shape, spec.dtype) * 0.02
+
+    out = {}
+    for i, (name, spec) in enumerate(sorted(specs.items())):
+        if name == "cache":
+            out[name] = family(cfg).init_cache(cfg, shape.global_batch,
+                                               shape.seq_len)
+        elif name == "pos":
+            out[name] = jnp.asarray(shape.seq_len - 1, jnp.int32)
+        else:
+            out[name] = mat(i, spec)
+    return out

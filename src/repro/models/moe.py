@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN (qwen3-moe family): top-k routing with capacity.
+
+Uses the slot-scatter formulation rather than the classic Switch dense
+dispatch einsum: a (tokens, E, C) one-hot dispatch tensor for top-8-of-128 at
+1M tokens would be ~20 GB *per batch group*; instead we compute
+position-in-expert by cumulative count, scatter token ids into an (E, C) slot
+table, gather expert inputs, run the batched expert FFN (EP-sharded einsum),
+and gather back. Peak intermediate is the (tokens, E) assignment count —
+O(S*k*E) int32 — plus the (E, C, d) expert buffers.
+
+Shapes carry a leading group axis ``g`` (the per-device batch shard) so the
+expert redistribution is an explicit resharding (batch-sharded -> expert-
+sharded) that GSPMD lowers to an all-to-all-like collective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import he_init
+from ..distributed.sharding import constrain
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 4)
+    return {
+        "router": he_init(ks[0], (d, E), dt),
+        "e_gate": he_init(ks[1], (E, d, ff), dt, fan_in=d),
+        "e_up": he_init(ks[2], (E, d, ff), dt, fan_in=d),
+        "e_down": he_init(ks[3], (E, ff, d), dt, fan_in=ff),
+    }
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(np.ceil(cfg.capacity_factor * tokens_per_group * cfg.top_k
+                    / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU lane alignment
+
+
+def moe_apply(params, cfg: ModelConfig, x):
+    """x: (b, s, d) -> (y: (b, s, d), aux_loss: scalar)."""
+    if cfg.moe_grouped:
+        return moe_apply_grouped(params, cfg, x)
+    b, s, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    S = b * s
+    C = capacity(cfg, S)
+    xt = x.reshape(S, d)
+
+    router_logits = (xt @ params["router"]).astype(jnp.float32)      # (S, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                            # (S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch/GShard style) ----
+    me = jnp.mean(probs, axis=0)                                     # (E,)
+    ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- position-in-expert (slot assignment with capacity) ----
+    flat_e = eidx.reshape(S * k)                                     # slot order: token-major
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)              # (S*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                        # prior count
+    pos = jnp.sum(pos * onehot, axis=-1)                             # (S*k,)
+    keep = pos < C
+    slot = flat_e * C + jnp.clip(pos, 0, C - 1)                      # (S*k,)
+
+    # ---- scatter token ids into the (E*C) slot table ----
+    src = jnp.arange(S * k, dtype=jnp.int32) // k                    # token of each slot
+    slot_for_scatter = jnp.where(keep, slot, E * C)                  # drop -> OOB
+    table = jnp.full((E * C,), S, jnp.int32)                         # S = pad token id
+    table = table.at[slot_for_scatter].set(src, mode="drop")
+    valid = table < S                                                # (E*C,)
+    table = jnp.where(valid, table, 0)
+
+    # ---- gather expert inputs; redistribute batch-sharded -> EP ----
+    xp = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)       # pad row
+    expert_in = jnp.take(xp, jnp.where(valid, table, S), axis=0)     # (E*C, d)
+    expert_in = expert_in.reshape(E, C, d)
+    expert_in = constrain(expert_in, ("experts", None, None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["e_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["e_up"])
+    h = constrain(h, ("experts", None, "expert_mlp"))
+    out_slots = jnp.einsum("ecf,efd->ecd", h, params["e_down"])
+    out_slots = constrain(out_slots, ("experts", None, None))
+    out_slots = out_slots.reshape(E * C, d)
+
+    # ---- gather back per (token, k) and combine with gate weights ----
+    tok_out = jnp.take(out_slots, slot, axis=0).reshape(S, k, d)     # (S, k, d)
+    w = (gates * keep.reshape(S, k)).astype(x.dtype)                 # dropped -> 0
+    y = jnp.einsum("skd,sk->sd", tok_out, w)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply_grouped(params, cfg: ModelConfig, x):
+    """Grouped (per-batch-row) dispatch — §Perf iteration B1.
+
+    The global formulation above routes over ALL tokens, so its slot-table
+    gather indexes the full token set and GSPMD must all-gather the
+    batch-sharded activations on every layer (the dominant collective for
+    the MoE cells). Routing per batch row keeps the cumsum/scatter/gather
+    LOCAL to the row's data shard; the only cross-device movement left is
+    the unavoidable EP redistribution (batch-sharded -> expert-sharded
+    slots), which lowers to an all-to-all. Capacity is per row, so token
+    drop behaviour matches the global router when capacity_factor covers
+    the per-row imbalance (tested dropless-equivalent in tests).
+    """
+    b, s, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, s)
+
+    router_logits = (x @ params["router"]).astype(jnp.float32)       # (b,s,E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                            # (b,s,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    flat_e = eidx.reshape(b, s * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)              # (b,sk,E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.sum(pos * onehot, axis=-1)                             # (b,sk)
+    keep = pos < C
+    slot = flat_e * C + jnp.clip(pos, 0, C - 1)
+
+    src = jnp.arange(s * k, dtype=jnp.int32)[None, :] // k           # (1,sk)
+    slot_sc = jnp.where(keep, slot, E * C)
+    table = jnp.full((b, E * C), s, jnp.int32)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s * k))
+    table = table.at[bidx, slot_sc].set(jnp.broadcast_to(src, (b, s * k)),
+                                        mode="drop")
+    valid = table < s
+    table = jnp.where(valid, table, 0)
+
+    xp = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    gidx = jnp.where(valid, table, s)
+    expert_in = jnp.take_along_axis(xp, gidx[..., None], axis=1)     # local!
+    expert_in = expert_in.reshape(b, E, C, d)
+    # the ONE cross-device move: batch-sharded -> (batch, expert)-sharded
+    expert_in = constrain(expert_in, ("batch", "experts", None, None))
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, params["e_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", expert_in, params["e_up"])
+    h = constrain(h, ("batch", "experts", None, "expert_mlp"))
+    out_slots = jnp.einsum("becf,efd->becd", h, params["e_down"])
+
+    if cfg.moe_combine == "scatter":
+        # §Perf iteration B3: combine on the EXPERT side. Gathering slots
+        # per token needs every (E, C, d) slot on every model-rank — GSPMD
+        # lowers that to a full all-gather of the slot tensor (b·E·C·d
+        # bytes/layer). Instead each expert-rank scatter-adds its own
+        # gate-weighted slots into a partial (b, s, d) buffer (table and
+        # out_slots share the (batch, experts) sharding, so the scatter is
+        # rank-local) and the partials all-reduce over the model axis:
+        # b·s·d bytes — E/(k·cf) ≈ 13x less for top-8-of-128.
+        out_slots = constrain(out_slots, ("batch", "experts", None, None))
+        gate_slot = jnp.zeros((b, E * C), jnp.float32)
+        gw = (gates * keep.reshape(b, s, k)).astype(jnp.float32)
+        gate_slot = gate_slot.at[bidx, slot_sc].set(
+            gw.reshape(b, s * k), mode="drop")
+        gate_slot = gate_slot.reshape(b, E, C)
+        gate_slot = constrain(gate_slot, ("batch", "experts", None))
+        contrib = out_slots * gate_slot[..., None].astype(out_slots.dtype)
+        tok_of_slot = table.reshape(b, E, C)
+        y = jnp.zeros((b, s, d), x.dtype)
+        brow = jnp.broadcast_to(jnp.arange(b)[:, None, None], (b, E, C))
+        tgt = jnp.where(valid.reshape(b, E, C), tok_of_slot, s)  # pad -> drop
+        y = y.at[brow, tgt].add(contrib, mode="drop")
+        y = constrain(y, ("batch", None, None))   # partial-sum all-reduce
+        return y, aux
+
+    out_slots = constrain(out_slots, ("batch", None, None, None))
+    out_slots = out_slots.reshape(b, E * C, d)
+    tok_out = jnp.take_along_axis(out_slots, slot[..., None], axis=1)
+    tok_out = tok_out.reshape(b, s, k, d)
+    w = (gates * keep.reshape(b, s, k)).astype(x.dtype)
+    y = jnp.einsum("bskd,bsk->bsd", tok_out, w)
+    return y, aux
+
+
+def moe_ffn_flops(cfg: ModelConfig, tokens: int) -> int:
+    """Active FLOPs for one MoE FFN pass over `tokens` tokens."""
+    C = capacity(cfg, tokens)
+    slots = cfg.n_experts * C
+    return slots * 6 * cfg.d_model * cfg.d_ff

@@ -1,0 +1,303 @@
+"""RecurrentGemma-style hybrid backbone (arXiv:2402.19427): RG-LRU recurrent
+blocks interleaved with local sliding-window attention, pattern 1 attn : 2
+recurrent, plus a GeGLU MLP after every mixer.
+
+RG-LRU recurrence (per channel, block-diagonal gates over n_heads blocks):
+    r_t = sigmoid(W_r x_t),  i_t = sigmoid(W_i x_t)
+    log_a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = exp(log_a_t) * h_{t-1} + sqrt(1 - exp(2 log_a_t)) * (i_t * x_t)
+
+Training evaluates the recurrence with an associative scan (log-space
+composition), decode with the O(1) step. The layer pattern is grouped into
+scan-able "superblocks" when it divides the depth; otherwise layers unroll
+(26 = 8 x (rec, rec, attn) + 2 rec for the 2B config).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (attention_cache_spec, attention_decode, attention_init,
+                     attention_apply, chunked_cross_entropy, embed,
+                     embedding_init, he_init, lm_logits, mlp_apply, mlp_init,
+                     rmsnorm, rmsnorm_init)
+from ..distributed.sharding import constrain
+
+C_RGLRU = 8.0
+
+
+def pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+    return tuple(pat[i % len(pat)] for i in range(cfg.n_layers))
+
+
+def _gate_init(key, cfg: ModelConfig) -> jax.Array:
+    w = cfg.resolved_lru_width
+    nb = max(cfg.n_heads, 1)
+    bs = w // nb
+    return he_init(key, (nb, bs, bs), cfg.dtype(), fan_in=bs)
+
+
+def _rec_layer_init(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": rmsnorm_init(d, dt),
+        "wx": he_init(ks[0], (d, w), dt),
+        "wy": he_init(ks[1], (d, w), dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_kernel, w)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "in_gate_w": _gate_init(ks[3], cfg),
+        "rec_gate_w": _gate_init(ks[4], cfg),
+        "in_gate_b": jnp.zeros((w,), dt),
+        "rec_gate_b": jnp.zeros((w,), dt),
+        # Lambda parameterised so a = exp(-c*softplus(a_param)) starts ~0.9-0.999
+        "a_param": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / C_RGLRU)).astype(dt)[None, :],
+        "w_out": he_init(ks[5], (w, d), dt, fan_in=w),
+        "ln2": rmsnorm_init(d, dt),
+        "mlp": mlp_init(ks[0], cfg),
+    }
+
+
+def _attn_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, cfg.dtype()),
+        "attn": attention_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.dtype()),
+        "mlp": mlp_init(k2, cfg),
+    }
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    pat = pattern(cfg)
+    kl, ke = jax.random.split(key)
+    keys = jax.random.split(kl, cfg.n_layers)
+    layers = [(_attn_layer_init(k, cfg) if p == "attn" else
+               _rec_layer_init(k, cfg)) for k, p in zip(keys, pat)]
+    return {
+        "embed": embedding_init(ke, cfg),
+        "layers": layers,
+        "ln_f": rmsnorm_init(cfg.d_model, cfg.dtype()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def _block_gate(x, w, b):
+    """Block-diagonal linear + sigmoid. x: (..., width); w: (nb, bs, bs)."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bs))
+    out = jnp.einsum("...nb,nbc->...nc", xs, w)
+    return jax.nn.sigmoid(out.reshape(x.shape) + b)
+
+
+def rglru_scan(x, log_a, gated_x):
+    """Associative scan of h_t = a_t h_{t-1} + b_t along axis 1.
+
+    x unused except for dtype/shape; log_a, gated_x: (b, s, w) float32.
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    la, bb = jax.lax.associative_scan(combine, (log_a, gated_x), axis=1)
+    return bb
+
+
+def rglru_apply(layer, cfg: ModelConfig, x):
+    """x: (b, s, w) post-conv branch. Returns recurrent output (b, s, w)."""
+    xf = x.astype(jnp.float32)
+    r = _block_gate(xf, layer["rec_gate_w"].astype(jnp.float32),
+                    layer["rec_gate_b"].astype(jnp.float32))
+    i = _block_gate(xf, layer["in_gate_w"].astype(jnp.float32),
+                    layer["in_gate_b"].astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(layer["a_param"].astype(jnp.float32)) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * (i * xf)
+    if cfg.attn_impl == "pallas":
+        from ..kernels import ops as kops
+        h = kops.rglru(log_a, gated)
+    else:
+        h = rglru_scan(xf, log_a, gated)
+    return h.astype(x.dtype)
+
+
+def rglru_step(layer, cfg: ModelConfig, x, state):
+    """Single-token step. x: (b, w); state: (b, w) f32."""
+    xf = x.astype(jnp.float32)
+    r = _block_gate(xf, layer["rec_gate_w"].astype(jnp.float32),
+                    layer["rec_gate_b"].astype(jnp.float32))
+    i = _block_gate(xf, layer["in_gate_w"].astype(jnp.float32),
+                    layer["in_gate_b"].astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(layer["a_param"].astype(jnp.float32))[0] * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    new_state = a * state + beta * (i * xf)
+    return new_state.astype(x.dtype), new_state
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+
+
+def _rec_block(layer, cfg: ModelConfig, x):
+    h = rmsnorm(layer["ln1"], x)
+    xb = _causal_conv(h @ layer["wx"], layer["conv_w"], layer["conv_b"])
+    yb = jax.nn.gelu(h @ layer["wy"])
+    lru = rglru_apply(layer, cfg, xb)
+    out = (lru * yb) @ layer["w_out"]
+    x = x + out
+    x = x + mlp_apply(layer["mlp"], rmsnorm(layer["ln2"], x))
+    return constrain(x, ("batch", "seq", None))
+
+
+def _attn_block(layer, cfg: ModelConfig, x, positions):
+    h = attention_apply(layer["attn"], cfg, rmsnorm(layer["ln1"], x),
+                        positions, causal=True)
+    x = x + h
+    x = x + mlp_apply(layer["mlp"], rmsnorm(layer["ln2"], x))
+    return constrain(x, ("batch", "seq", None))
+
+
+def backbone(params, cfg: ModelConfig, tokens):
+    x = embed(params["embed"], tokens).astype(cfg.adtype())
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    pat = pattern(cfg)
+    for layer, p in zip(params["layers"], pat):
+        fn = (lambda lx, l=layer: _attn_block(l, cfg, lx, positions)) \
+            if p == "attn" else (lambda lx, l=layer: _rec_block(l, cfg, lx))
+        x = jax.checkpoint(fn)(x) if cfg.remat else fn(x)
+    return rmsnorm(params["ln_f"], x)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jax.Array:
+    h = backbone(params, cfg, batch["tokens"])
+    return chunked_cross_entropy(h, params["embed"]["head"], batch["labels"],
+                                 batch.get("mask"), cfg.logits_chunk)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.adtype()
+    pat = pattern(cfg)
+    w = cfg.resolved_lru_width
+    cache = []
+    for p in pat:
+        if p == "attn":
+            shape = attention_cache_spec(cfg, batch, max_seq)
+            cache.append({"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)})
+        else:
+            cache.append({"lru": jnp.zeros((batch, w), jnp.float32),
+                          "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w),
+                                            dtype)})
+    return cache
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.adtype()
+    pat = pattern(cfg)
+    w = cfg.resolved_lru_width
+    out = []
+    for p in pat:
+        if p == "attn":
+            shape = attention_cache_spec(cfg, batch, max_seq)
+            out.append({"k": jax.ShapeDtypeStruct(shape, dtype),
+                        "v": jax.ShapeDtypeStruct(shape, dtype)})
+        else:
+            out.append({"lru": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+                        "conv": jax.ShapeDtypeStruct(
+                            (batch, cfg.conv_kernel - 1, w), dtype)})
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
+    x = embed(params["embed"], tokens).astype(cfg.adtype())   # (b, 1, d)
+    pat = pattern(cfg)
+    new_cache = []
+    for layer, p, c in zip(params["layers"], pat, cache):
+        if p == "attn":
+            h, (ck, cv) = attention_decode(layer["attn"], cfg,
+                                           rmsnorm(layer["ln1"], x),
+                                           (c["k"], c["v"]), pos)
+            x = x + h
+            new_cache.append({"k": ck, "v": cv})
+        else:
+            h = rmsnorm(layer["ln1"], x)[:, 0]                # (b, d)
+            xb_raw = h @ layer["wx"]
+            window = jnp.concatenate([c["conv"], xb_raw[:, None, :]], axis=1)
+            xb = jnp.einsum("bkc,kc->bc", window, layer["conv_w"]) + layer["conv_b"]
+            yb = jax.nn.gelu(h @ layer["wy"])
+            lru_out, lru_state = rglru_step(layer, cfg, xb, c["lru"])
+            out = (lru_out * yb) @ layer["w_out"]
+            x = x + out[:, None, :]
+            new_cache.append({"lru": lru_state, "conv": window[:, 1:, :]})
+        x = x + mlp_apply(layer["mlp"], rmsnorm(layer["ln2"], x))
+    h = rmsnorm(params["ln_f"], x)
+    logits = lm_logits(params["embed"], h)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, max_seq=None):
+    """Forward pass collecting per-layer decode state."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    total = max(s, max_seq or s)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed(params["embed"], tokens).astype(cfg.adtype())
+    pat = pattern(cfg)
+    cache = []
+    from .layers import _qkv
+    for layer, p in zip(params["layers"], pat):
+        if p == "attn":
+            h = rmsnorm(layer["ln1"], x)
+            _, k, v = _qkv(layer["attn"], cfg, h, positions)
+            win = min(cfg.attn_window or total, total)
+            # rolling buffer: slot for absolute position p is p % win
+            keep = min(win, s)
+            slots = (jnp.arange(s - keep, s) % win)
+            kb = jnp.zeros((b, win) + k.shape[2:], k.dtype)
+            vb = jnp.zeros((b, win) + v.shape[2:], v.dtype)
+            kb = kb.at[:, slots].set(k[:, -keep:])
+            vb = vb.at[:, slots].set(v[:, -keep:])
+            cache.append({"k": kb, "v": vb})
+            x = x + attention_apply(layer["attn"], cfg, h, positions, causal=True)
+        else:
+            h = rmsnorm(layer["ln1"], x)
+            xb_raw = h @ layer["wx"]
+            xb = _causal_conv(xb_raw, layer["conv_w"], layer["conv_b"])
+            yb = jax.nn.gelu(h @ layer["wy"])
+            lru = rglru_apply(layer, cfg, xb)
+            # final lru state = last timestep of the scan (recompute in f32)
+            xf = xb.astype(jnp.float32)
+            r = _block_gate(xf, layer["rec_gate_w"].astype(jnp.float32),
+                            layer["rec_gate_b"].astype(jnp.float32))
+            i = _block_gate(xf, layer["in_gate_w"].astype(jnp.float32),
+                            layer["in_gate_b"].astype(jnp.float32))
+            log_a = -C_RGLRU * jax.nn.softplus(
+                layer["a_param"].astype(jnp.float32)) * r
+            beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+            hseq = rglru_scan(xf, log_a, beta * (i * xf))
+            cache.append({"lru": hseq[:, -1].astype(jnp.float32),
+                          "conv": xb_raw[:, -(cfg.conv_kernel - 1):, :]})
+            x = x + (lru * yb) @ layer["w_out"]
+        x = x + mlp_apply(layer["mlp"], rmsnorm(layer["ln2"], x))
+    h = rmsnorm(params["ln_f"], x)
+    logits = lm_logits(params["embed"], h[:, -1:, :])
+    return logits, cache

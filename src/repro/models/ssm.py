@@ -1,0 +1,283 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) backbone.
+
+Training uses the chunked dual form: within a chunk of Q tokens the SSD
+recurrence is an (masked, decay-weighted) attention-like block matmul —
+MXU-friendly — and chunks exchange an (heads, state, head_dim) carried state
+via a short ``lax.scan``. Decode is the O(1) recurrent update.
+
+Layer params (per layer, scan-stacked):
+  in_proj  (d, 2*d_inner + 2*state + nheads)   -> z, xBC, dt
+  conv_w   (kernel, d_inner + 2*state), conv_b  depthwise causal conv
+  A_log, dt_bias, D                             per-head scalars
+  norm                                          gated RMSNorm scale
+  out_proj (d_inner, d)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (chunked_cross_entropy, embed, embedding_init, he_init,
+                     lm_logits, rmsnorm, rmsnorm_init)
+from ..distributed.sharding import constrain
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def _layer_init(key, cfg: ModelConfig) -> dict:
+    d, din, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * din + 2 * ns + nh
+    return {
+        "in_proj": he_init(ks[0], (d, in_dim), dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, _conv_dim(cfg)))
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dt),
+        "dt_bias": jnp.zeros((nh,), dt),
+        "D": jnp.ones((nh,), dt),
+        "norm": rmsnorm_init(din, dt),
+        "out_proj": he_init(ks[3], (din, d), dt, fan_in=din),
+    }
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    kl, ke = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    return {
+        "embed": embedding_init(ke, cfg),
+        "layers": layers,
+        "ln_f": rmsnorm_init(cfg.d_model, cfg.dtype()),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (b, s, c); w: (k, c)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _split_zxbcdt(cfg: ModelConfig, zxbcdt):
+    din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:2 * din + 2 * ns]
+    dt = zxbcdt[..., 2 * din + 2 * ns:]
+    return z, xBC, dt
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, return_final_state: bool = False):
+    """Chunked SSD scan (pure jnp; oracle for the Pallas kernel).
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,) negative; B, C: (b, s, n).
+    Returns y: (b, s, h, p) [, final_state (b, h, p, n)].
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Q = chunk
+    nc = s // Q
+    assert s % Q == 0, f"seq {s} must divide chunk {Q}"
+    xc = x.reshape(b, nc, Q, h, p)
+    dtc = dt.reshape(b, nc, Q, h)
+    Bc = B.reshape(b, nc, Q, n)
+    Cc = C.reshape(b, nc, Q, n)
+
+    dA = dtc * A  # (b, nc, Q, h) negative increments
+    seg = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+    total = seg[:, :, -1, :]                         # (b, nc, h)
+
+    # ---- intra-chunk (dual / attention-like) term ----
+    # L[q, q'] = exp(seg_q - seg_q') for q >= q'. Mask BEFORE exp: the
+    # acausal region has rel > 0 and exp overflows -> NaN grads through where.
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # (b,nc,Q,Q,h)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    rel = jnp.where(causal[None, None, :, :, None], rel, -jnp.inf)
+    L = jnp.exp(rel)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)               # (b,nc,Q,Q)
+    att = CB[..., None] * L * dtc[:, :, None, :, :]          # weight at source k
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att, xc)
+
+    # ---- chunk states and inter-chunk recurrence ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - seg)       # (b,nc,Q,h)
+    S_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                         Bc, dtc * decay_to_end, xc)         # (b,nc,h,n,p)
+
+    def scan_fn(carry, xs):
+        S_prev = carry                                        # (b,h,n,p)
+        S_c, tot_c = xs                                       # (b,h,n,p),(b,h)
+        new = S_prev * jnp.exp(tot_c)[..., None, None] + S_c
+        return new, S_prev
+
+    S0 = jnp.zeros((b, h, n, p), x.dtype)
+    S_final, S_in = jax.lax.scan(scan_fn,
+                                 S0,
+                                 (S_chunk.swapaxes(0, 1), total.swapaxes(0, 1)))
+    S_in = S_in.swapaxes(0, 1)                                # (b,nc,h,n,p) state entering chunk
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc, jnp.exp(seg), S_in)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    if return_final_state:
+        return y, S_final.swapaxes(-1, -2)                    # (b, h, p, n)
+    return y
+
+
+def _mixer(layer, cfg: ModelConfig, x, return_state: bool = False):
+    """Full-sequence SSD mixer. x: (b, s, d) -> (b, s, d) [, states]."""
+    b, s, _ = x.shape
+    din, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ layer["in_proj"]
+    z, xBC, dt = _split_zxbcdt(cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC, layer["conv_w"], layer["conv_b"]))
+    xs = xBC[..., :din].reshape(b, s, nh, hp)
+    xs = constrain(xs, ("batch", "seq", "heads", None))
+    B = xBC[..., din:din + ns]
+    C = xBC[..., din + ns:]
+    dt = jax.nn.softplus(dt + layer["dt_bias"])
+    dt = constrain(dt, ("batch", "seq", "heads"))
+    # pad seq up to a chunk multiple; padded steps get dt=0 -> identity decay
+    # and zero state update, so results and final state are unaffected.
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    A = -jnp.exp(layer["A_log"].astype(jnp.float32))
+    if cfg.attn_impl == "pallas" and not return_state:
+        from ..kernels import ops as kops
+        y = kops.ssd(xs, dt, A, B, C, chunk=cfg.ssm_chunk)
+        final_state = None
+    else:
+        res = ssd_chunked(xs.astype(jnp.float32), dt.astype(jnp.float32), A,
+                          B.astype(jnp.float32), C.astype(jnp.float32),
+                          cfg.ssm_chunk, return_final_state=return_state)
+        y, final_state = (res if return_state else (res, None))
+        y = y.astype(x.dtype)
+    y = y + layer["D"][None, None, :, None] * xs
+    if pad:
+        y = y[:, :s]
+    y = y.reshape(b, s, din)
+    y = rmsnorm(layer["norm"], y * jax.nn.silu(z))
+    y = constrain(y, ("batch", "seq", "mlp"))
+    out = y @ layer["out_proj"]
+    if return_state:
+        # conv cache wants the last (k-1) PRE-conv inputs; recompute them
+        zx = (x @ layer["in_proj"])[..., din:2 * din + 2 * ns]
+        conv_state = zx[:, -(cfg.conv_kernel - 1):, :]
+        return out, (final_state, conv_state)
+    return out
+
+
+def backbone(params, cfg: ModelConfig, tokens):
+    x = embed(params["embed"], tokens).astype(cfg.adtype())
+
+    def blk(carry, layer):
+        return carry + _mixer(layer, cfg, carry), None
+
+    blk_fn = jax.checkpoint(blk) if cfg.remat else blk
+    x, _ = jax.lax.scan(blk_fn, x, params["layers"])
+    return rmsnorm(params["ln_f"], x)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jax.Array:
+    h = backbone(params, cfg, batch["tokens"])
+    return chunked_cross_entropy(h, params["embed"]["head"], batch["labels"],
+                                 batch.get("mask"), cfg.logits_chunk)
+
+
+# ---------------------------------------------------------------------------
+# serving: recurrent decode (O(1) per token; why long_500k is an SSM shape)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    del max_seq  # state size is independent of context length
+    dtype = dtype or cfg.adtype()
+    L, nh, hp, ns = cfg.n_layers, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((L, batch, nh, hp, ns), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.conv_kernel - 1, _conv_dim(cfg)), dtype),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    del max_seq
+    dtype = dtype or cfg.adtype()
+    L, nh, hp, ns = cfg.n_layers, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "ssm": jax.ShapeDtypeStruct((L, batch, nh, hp, ns), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((L, batch, cfg.conv_kernel - 1,
+                                      _conv_dim(cfg)), dtype),
+    }
+
+
+def _mixer_step(layer, cfg: ModelConfig, x, ssm_state, conv_state):
+    """Single-token recurrent step. x: (b, d)."""
+    din, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ layer["in_proj"]
+    z, xBC, dt = _split_zxbcdt(cfg, zxbcdt)
+    # conv cache: (b, k-1, conv_dim)
+    window = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # (b,k,c)
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, layer["conv_w"])
+                      + layer["conv_b"])
+    new_conv = window[:, 1:, :]
+    xs = xBC[..., :din].reshape(-1, nh, hp)
+    B = xBC[..., din:din + ns]
+    C = xBC[..., din + ns:]
+    dt = jax.nn.softplus(dt + layer["dt_bias"])                      # (b,nh)
+    A = -jnp.exp(layer["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                             # (b,nh)
+    # state: (b, nh, hp, ns)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xs.astype(jnp.float32),
+                     B.astype(jnp.float32))
+    new_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    y = y.astype(x.dtype) + layer["D"][None, :, None] * xs
+    y = y.reshape(-1, din)
+    y = rmsnorm(layer["norm"], y * jax.nn.silu(z))
+    return y @ layer["out_proj"], new_state, new_conv
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
+    del pos  # recurrent state carries all context
+    x = embed(params["embed"], tokens[:, 0]).astype(cfg.adtype())    # (b, d)
+
+    def block(carry, xs):
+        layer, s_ssm, s_conv = xs
+        h = carry
+        out, s_ssm, s_conv = _mixer_step(layer, cfg, h, s_ssm, s_conv)
+        return h + out, (s_ssm, s_conv)
+
+    h, (ssm_s, conv_s) = jax.lax.scan(
+        block, x, (params["layers"], cache["ssm"], cache["conv"]))
+    h = rmsnorm(params["ln_f"], h)
+    logits = lm_logits(params["embed"], h[:, None, :])
+    return logits, {"ssm": ssm_s, "conv": conv_s}
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Prefill via the chunked form, collecting each layer's final SSD state
+    and conv tail as the decode cache (single forward pass)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(cfg.adtype())
+
+    def blk(carry, layer):
+        out, (ssm_state, conv_state) = _mixer(layer, cfg, carry,
+                                              return_state=True)
+        return carry + out, (ssm_state.astype(jnp.float32),
+                             conv_state)
+
+    blk_fn = jax.checkpoint(blk) if cfg.remat else blk
+    h, (ssm_s, conv_s) = jax.lax.scan(blk_fn, x, params["layers"])
+    h = rmsnorm(params["ln_f"], h)
+    logits = lm_logits(params["embed"], h[:, -1:, :])
+    return logits, {"ssm": ssm_s, "conv": conv_s}

@@ -1,0 +1,249 @@
+"""Transformer backbones: dense GQA decoder, MoE decoder, encoder-only, VLM.
+
+One block implementation serves four of the six assigned families; family
+differences are config-driven (MoE FFN vs dense FFN, causal vs bidirectional,
+token vs frame/patch frontends). Layers are scan-stacked (params carry a
+leading L dim) with optional remat — the MaxText-style shape that keeps HLO
+size O(1) in depth and enables clean FSDP all-gather per layer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_lib
+from .config import ENCODER, MOE, VLM, ModelConfig
+from .layers import (attention_apply, attention_cache_spec, attention_decode,
+                     attention_init, chunked_cross_entropy, cross_entropy,
+                     embed, embedding_init, he_init, lm_logits, mlp_apply,
+                     mlp_init, rmsnorm, rmsnorm_init)
+from ..distributed.sharding import constrain
+
+
+def _layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, cfg.dtype()),
+        "attn": attention_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.dtype()),
+    }
+    if cfg.family == MOE:
+        p["moe"] = moe_lib.moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    kl, ke, kf = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    if cfg.scan_layers:
+        layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    else:
+        layers = [_layer_init(k, cfg) for k in layer_keys]
+    params = {
+        "embed": embedding_init(ke, cfg),
+        "layers": layers,
+        "ln_f": rmsnorm_init(cfg.d_model, cfg.dtype()),
+    }
+    if cfg.family in (VLM, ENCODER):
+        params["frontend"] = {"proj": he_init(kf, (cfg.frontend_dim, cfg.d_model),
+                                              cfg.dtype())}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(cfg: ModelConfig, x, layer, positions, causal: bool):
+    h = attention_apply(layer["attn"], cfg, rmsnorm(layer["ln1"], x), positions,
+                        causal=causal)
+    x = x + h
+    if cfg.family == MOE:
+        h, aux = moe_lib.moe_apply(layer["moe"], cfg, rmsnorm(layer["ln2"], x))
+    else:
+        h, aux = mlp_apply(layer["mlp"], rmsnorm(layer["ln2"], x)), 0.0
+    x = x + h
+    if cfg.attn_shard == "seq":
+        # full sequence parallelism: keep the residual stream seq-sharded on
+        # the model axis so q/o (and the MLP) never reshard per layer; only
+        # k/v gather the full sequence (§Perf iteration A6).
+        x = constrain(x, ("batch", ("model",), None))
+    else:
+        x = constrain(x, ("batch", "seq", None))
+    return x, jnp.asarray(aux, jnp.float32)
+
+
+def backbone(params, cfg: ModelConfig, x, positions, causal: bool):
+    """x: (b, s, d) input embeddings -> (hidden (b, s, d), aux loss)."""
+    x = x.astype(cfg.adtype())
+
+    def block(carry, layer):
+        h, aux = _block(cfg, carry, layer, positions, causal)
+        return h, aux
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(blk, x, params["layers"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for layer in params["layers"]:
+            x, a = blk(x, layer)
+            aux = aux + a
+    return rmsnorm(params["ln_f"], x), aux
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Family-specific input embedding. Returns (x, positions, loss_mask)."""
+    if cfg.family == ENCODER:
+        # audio frontend stub: precomputed frame embeddings
+        frames = batch["frames"]                        # (b, s, frontend_dim)
+        x = frames.astype(cfg.adtype()) @ params["frontend"]["proj"]
+        b, s = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        return x, pos, batch.get("mask")
+    if cfg.family == VLM:
+        patches = batch["patches"]                      # (b, n_patch, frontend)
+        tokens = batch["tokens"]                        # (b, s_text)
+        pe = patches.astype(cfg.adtype()) @ params["frontend"]["proj"]
+        te = embed(params["embed"], tokens)
+        x = jnp.concatenate([pe, te], axis=1)
+        b, s = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        npatch = patches.shape[1]
+        mask = jnp.concatenate([jnp.zeros((b, npatch), bool),
+                                jnp.ones((b, tokens.shape[1]), bool)], axis=1)
+        return x, pos, mask
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens)
+    b, s = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, pos, batch.get("mask")
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Next-token (decoder) or frame-label (encoder) cross-entropy."""
+    x, pos, mask = _embed_inputs(params, cfg, batch)
+    causal = cfg.family != ENCODER
+    h, aux = backbone(params, cfg, x, pos, causal)
+    if cfg.family == VLM:
+        # labels cover text positions only; logits from text region
+        npatch = batch["patches"].shape[1]
+        h = h[:, npatch:, :]
+        mask = None
+    labels = batch["labels"]
+    ce = chunked_cross_entropy(h, params["embed"]["head"], labels, mask,
+                               cfg.logits_chunk)
+    return ce + aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Stacked (L, b, S, nkv, hd) K and V buffers (+ position scalar)."""
+    dtype = dtype or cfg.adtype()
+    shape = attention_cache_spec(cfg, batch, max_seq)
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L,) + shape, dtype),
+        "v": jnp.zeros((L,) + shape, dtype),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.adtype()
+    shape = attention_cache_spec(cfg, batch, max_seq)
+    L = cfg.n_layers
+    return {
+        "k": jax.ShapeDtypeStruct((L,) + shape, dtype),
+        "v": jax.ShapeDtypeStruct((L,) + shape, dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch, max_seq: Optional[int] = None):
+    """Run the full prompt, return (last-position logits, KV cache).
+
+    The cache is built by re-projecting K/V per layer inside the scan; prompt
+    positions are 0..s-1. ``max_seq`` pads the cache so decode can append.
+    """
+    x, pos, _ = _embed_inputs(params, cfg, batch)
+    x = x.astype(cfg.adtype())
+    s = x.shape[1]
+
+    def block(carry, layer):
+        h = carry
+        hn = rmsnorm(layer["ln1"], h)
+        # recompute K/V to expose them as scan outputs
+        from .layers import _qkv  # local import to avoid cycle at module load
+        q, k, v = _qkv(layer["attn"], cfg, hn, pos)
+        attn_out = attention_apply(layer["attn"], cfg, hn, pos, causal=True)
+        h = h + attn_out
+        if cfg.family == MOE:
+            f, _ = moe_lib.moe_apply(layer["moe"], cfg, rmsnorm(layer["ln2"], h))
+        else:
+            f = mlp_apply(layer["mlp"], rmsnorm(layer["ln2"], h))
+        h = h + f
+        h = constrain(h, ("batch", "seq", None))
+        return h, (k, v)
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    if cfg.scan_layers:
+        h, (ks, vs) = jax.lax.scan(blk, x, params["layers"])
+    else:
+        ks_l, vs_l = [], []
+        h = x
+        for layer in params["layers"]:
+            h, (k, v) = blk(h, layer)
+            ks_l.append(k)
+            vs_l.append(v)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    h = rmsnorm(params["ln_f"], h)
+    logits = lm_logits(params["embed"], h[:, -1:, :])
+    if cfg.attn_window > 0:
+        ks = ks[:, :, -cfg.attn_window:]
+        vs = vs[:, :, -cfg.attn_window:]
+    elif max_seq is not None and max_seq > s:
+        pad = [(0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
+    """One decode step. tokens: (b, 1) int32; pos: scalar int32 (next index);
+    cache: {"k","v"} stacked (L, b, S, nkv, hd). Returns (logits, cache)."""
+    x = embed(params["embed"], tokens).astype(cfg.adtype())
+
+    def block(carry, xs):
+        layer, ck, cv = xs
+        h = carry
+        attn_out, (ck, cv) = attention_decode(
+            layer["attn"], cfg, rmsnorm(layer["ln1"], h), (ck, cv), pos)
+        h = h + attn_out
+        if cfg.family == MOE:
+            f, _ = moe_lib.moe_apply(layer["moe"], cfg, rmsnorm(layer["ln2"], h))
+        else:
+            f = mlp_apply(layer["mlp"], rmsnorm(layer["ln2"], h))
+        h = h + f
+        return h, (ck, cv)
+
+    if cfg.scan_layers:
+        h, (ks, vs) = jax.lax.scan(block, x, (params["layers"], cache["k"],
+                                              cache["v"]))
+    else:
+        ks_l, vs_l = [], []
+        h = x
+        for i, layer in enumerate(params["layers"]):
+            h, (ck, cv) = block(h, (layer, cache["k"][i], cache["v"][i]))
+            ks_l.append(ck)
+            vs_l.append(cv)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    h = rmsnorm(params["ln_f"], h)
+    logits = lm_logits(params["embed"], h)
+    return logits, {"k": ks, "v": vs}

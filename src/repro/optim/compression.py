@@ -1,0 +1,73 @@
+"""Gradient compression: int8 quantized cross-replica reduction with error
+feedback — a distributed-optimization trick for the DP/pod axis where
+gradient all-reduce dominates (see EXPERIMENTS.md §Roofline: several cells
+are collective-bound).
+
+``quantize``/``dequantize`` are symmetric per-tensor int8 (wire bytes 1/4 of
+f32, 1/2 of bf16); ``residual`` keeps the quantization error for the next
+step (error feedback preserves convergence; Karimireddy et al. 2019).
+``compressed_psum`` demonstrates the wire format inside shard_map: members
+exchange int8 + one f32 scale instead of f32 tensors.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jax.Array        # int8 payload
+    scale: jax.Array    # f32 scalar
+
+
+def quantize(x: jax.Array) -> QTensor:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def dequantize(t: QTensor, dtype=jnp.float32) -> jax.Array:
+    return (t.q.astype(jnp.float32) * t.scale).astype(dtype)
+
+
+def quantize_with_feedback(x: jax.Array, residual: jax.Array
+                           ) -> Tuple[QTensor, jax.Array]:
+    """Error feedback: compress (x + residual), keep the new error."""
+    target = x.astype(jnp.float32) + residual
+    qt = quantize(target)
+    new_residual = target - dequantize(qt)
+    return qt, new_residual
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean over `axis_name` exchanging int8+scale on the wire.
+
+    Each member all-gathers the quantized payloads (n*size/4 bytes vs n*size
+    f32 bytes) and reduces locally in f32.
+    """
+    qt = quantize(x)
+    qs = jax.lax.all_gather(qt.q, axis_name)          # (n, ...) int8
+    ss = jax.lax.all_gather(qt.scale, axis_name)      # (n,) f32
+    n = qs.shape[0]
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0))
+    return (total / n).astype(x.dtype)
+
+
+def tree_quantize_with_feedback(grads, residuals):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    qts, new_rs = [], []
+    for g, r in zip(flat_g, flat_r):
+        qt, nr = quantize_with_feedback(g, r)
+        qts.append(qt)
+        new_rs.append(nr)
+    return (jax.tree.unflatten(treedef, qts),
+            jax.tree.unflatten(treedef, new_rs))
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

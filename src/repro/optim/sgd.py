@@ -1,0 +1,41 @@
+"""Plain (momentum) SGD — the LM-scale analogue of the paper's MBSGD."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 1e-2
+    momentum: float = 0.9
+
+    def init(self, params) -> SGDState:
+        if self.momentum == 0.0:
+            return SGDState(jnp.zeros((), jnp.int32), None)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return SGDState(jnp.zeros((), jnp.int32), jax.tree.map(zeros, params))
+
+    def apply(self, grads, state: SGDState, params) -> Tuple[Any, SGDState]:
+        step = state.step + 1
+        if self.momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - self.lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, SGDState(step, None)
+        mom = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state.momentum, grads)
+        new = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - self.lr * m).astype(p.dtype),
+            params, mom)
+        return new, SGDState(step, mom)

@@ -1,0 +1,104 @@
+"""Batched serving: request queue -> batched prefill -> decode loop.
+
+A deliberately compact production shape: fixed decode slots, greedy or
+temperature sampling, per-request stop lengths, and KV-cache reuse across
+steps (the decode_step donates its cache). The dry-run's decode_32k /
+long_500k cells lower exactly the step function used here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model_api
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # (s,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0           # 0 -> greedy
+
+
+@dataclasses.dataclass
+class Completion:
+    tokens: np.ndarray
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        n = len(self.tokens)
+        return n / self.decode_s if self.decode_s > 0 else float("inf")
+
+
+class BatchedServer:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
+                 max_seq: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.fam = model_api.family(cfg)
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.key = jax.random.PRNGKey(seed)
+
+        fam, c = self.fam, self.cfg
+
+        def _decode(params, tokens, pos, cache):
+            return fam.decode_step(params, c, tokens, pos, cache)
+
+        self._decode = jax.jit(_decode, donate_argnums=(3,))
+        self._prefill = jax.jit(
+            lambda params, batch: fam.prefill(params, c, batch,
+                                              max_seq=max_seq))
+
+    def _pad_prompts(self, reqs: List[Request]):
+        """Left-pad to a common length so last prompt token aligns."""
+        maxlen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((len(reqs), maxlen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, maxlen - len(r.prompt):] = r.prompt
+        return jnp.asarray(toks), maxlen
+
+    def _sample(self, logits, temperature):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    def serve(self, reqs: List[Request]) -> List[Completion]:
+        out: List[Completion] = []
+        for lo in range(0, len(reqs), self.max_batch):
+            out.extend(self._serve_batch(reqs[lo:lo + self.max_batch]))
+        return out
+
+    def _serve_batch(self, reqs: List[Request]) -> List[Completion]:
+        tokens, plen = self._pad_prompts(reqs)
+        steps = max(r.max_new_tokens for r in reqs)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, {"tokens": tokens})
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        temps = max(r.temperature for r in reqs)
+        generated = []
+        cur = self._sample(logits[:, -1, :], temps)
+        t1 = time.perf_counter()
+        for i in range(steps):
+            generated.append(np.asarray(cur))
+            logits, cache = self._decode(self.params, cur[:, None],
+                                         jnp.asarray(plen + i, jnp.int32),
+                                         cache)
+            cur = self._sample(logits[:, -1, :], temps)
+        jax.block_until_ready(cur)
+        t_decode = time.perf_counter() - t1
+
+        gen = np.stack(generated, axis=1)     # (b, steps)
+        return [Completion(gen[i, :reqs[i].max_new_tokens], t_prefill, t_decode)
+                for i in range(len(reqs))]

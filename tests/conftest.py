@@ -1,0 +1,8 @@
+import sys
+from pathlib import Path
+
+# make `from tests.util import ...` work regardless of invocation dir
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,82 @@
+"""Dry-run integration: one real cell compiled per mesh in a subprocess
+(the full 40-cell x 2-mesh sweep runs via `python -m repro.launch.dryrun
+--all` and its artifacts live in artifacts/dryrun/)."""
+import json
+from pathlib import Path
+
+import pytest
+
+from tests.util import run_py, REPO
+
+CELL_SNIPPET = """
+from repro.launch.dryrun import run_cell
+res = run_cell("{arch}", "{shape}", multi_pod={mp}, save=False)
+assert res["status"] == "ok", res.get("error")
+r = res["roofline"]
+assert r["flops"] > 0 and r["hbm_bytes"] > 0
+assert r["dominant"] in ("compute", "memory", "collective")
+assert res["useful_fraction"] is None or res["useful_fraction"] > 0
+print("CELL-OK", r["dominant"])
+"""
+
+
+@pytest.mark.slow
+def test_single_pod_cell_compiles():
+    r = run_py(CELL_SNIPPET.format(arch="mamba2-370m", shape="decode_32k",
+                                   mp=False), devices=512, timeout=900)
+    assert "CELL-OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_multi_pod_cell_compiles():
+    r = run_py(CELL_SNIPPET.format(arch="yi-6b", shape="decode_32k",
+                                   mp=True), devices=512, timeout=900)
+    assert "CELL-OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_skip_cells_are_documented():
+    from repro import configs
+    from repro.models import model_api
+    skips = []
+    for arch in configs.ARCH_IDS:
+        for s in model_api.SHAPES.values():
+            reason = model_api.supports(configs.get(arch), s)
+            if reason:
+                skips.append((arch, s.name))
+    assert ("hubert-xlarge", "decode_32k") in skips
+    assert ("hubert-xlarge", "long_500k") in skips
+    assert ("yi-6b", "long_500k") in skips
+    assert ("mamba2-370m", "long_500k") not in skips
+    assert ("recurrentgemma-2b", "long_500k") not in skips
+    assert len(skips) == 9
+
+
+def test_sweep_artifacts_complete_if_present():
+    """If the full sweep has been run, both meshes must have 40 cells."""
+    art = REPO / "artifacts" / "dryrun"
+    if not art.exists():
+        pytest.skip("sweep not run yet")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        files = list(art.glob(f"*__{mesh}.json"))
+        if not files:
+            pytest.skip(f"{mesh} sweep not run")
+        assert len(files) == 40, f"{mesh}: {len(files)}"
+        ok = sum(1 for f in files
+                 if json.loads(f.read_text())["status"] == "ok")
+        skip = sum(1 for f in files
+                   if json.loads(f.read_text())["status"] == "skip")
+        assert ok == 31 and skip == 9, (mesh, ok, skip)
+
+
+def test_production_mesh_shapes():
+    code = """
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+assert m1.devices.shape == (16, 16) and m1.axis_names == ("data", "model")
+m2 = make_production_mesh(multi_pod=True)
+assert m2.devices.shape == (2, 16, 16)
+assert m2.axis_names == ("pod", "data", "model")
+print("mesh-ok")
+"""
+    r = run_py(code, devices=512, timeout=300)
+    assert "mesh-ok" in r.stdout, r.stderr

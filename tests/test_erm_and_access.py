@@ -1,0 +1,79 @@
+"""ERM problem + access-time cost model tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ERMProblem, samplers, synth_classification
+from repro.core import access_model as am
+from repro.core.erm import slice_batch, gather_batch
+
+
+def test_gradient_matches_finite_difference():
+    key = jax.random.PRNGKey(0)
+    X, y, _ = synth_classification(key, 64, 8)
+    prob = ERMProblem(reg=1e-2)
+    w = jax.random.normal(key, (8,)) * 0.3
+    g = prob.full_grad(w, X, y)
+    eps = 1e-4
+    for i in range(8):
+        e = jnp.zeros(8).at[i].set(eps)
+        fd = (prob.objective(w + e, X, y) - prob.objective(w - e, X, y)) / (2 * eps)
+        np.testing.assert_allclose(float(g[i]), float(fd), atol=1e-3)
+
+
+def test_lipschitz_bound_holds():
+    key = jax.random.PRNGKey(1)
+    X, y, _ = synth_classification(key, 128, 8)
+    prob = ERMProblem(reg=1e-2)
+    L = float(prob.lipschitz(X))
+    k1, k2 = jax.random.split(key)
+    for _ in range(10):
+        k1, k2 = jax.random.split(k2)
+        w1 = jax.random.normal(k1, (8,))
+        w2 = jax.random.normal(k2, (8,))
+        lhs = float(jnp.linalg.norm(prob.full_grad(w1, X, y)
+                                    - prob.full_grad(w2, X, y)))
+        rhs = L * float(jnp.linalg.norm(w1 - w2))
+        assert lhs <= rhs * 1.001
+
+
+def test_slice_and_gather_select_same_rows():
+    key = jax.random.PRNGKey(2)
+    X, y, _ = synth_classification(key, 100, 6)
+    Xb1, yb1 = slice_batch(X, y, jnp.asarray(30), 10)
+    idx = jnp.arange(30, 40)
+    Xb2, yb2 = gather_batch(X, y, idx)
+    assert jnp.array_equal(Xb1, Xb2) and jnp.array_equal(yb1, yb2)
+
+
+@given(b=st.integers(1, 4096), row=st.integers(8, 4096))
+@settings(max_examples=50, deadline=None)
+def test_contiguous_access_never_slower_in_model(b, row):
+    """Cost model: CS/SS access time <= RS on every tier (paper §2)."""
+    for tier in am.TIERS.values():
+        rs = am.batch_access_time(tier, samplers.RANDOM, b, row)
+        ss = am.batch_access_time(tier, samplers.SYSTEMATIC, b, row)
+        cs = am.batch_access_time(tier, samplers.CYCLIC, b, row)
+        assert ss <= rs * 1.0001
+        assert abs(ss - cs) < 1e-12
+
+
+def test_hdd_speedup_larger_than_ssd():
+    """The paper: 'the difference would be more prominent for HDD'."""
+    s_hdd = am.predicted_speedup(am.HDD, 10**6, 500, 400)
+    s_ssd = am.predicted_speedup(am.SSD, 10**6, 500, 400)
+    s_ram = am.predicted_speedup(am.RAM, 10**6, 500, 400)
+    assert s_hdd > s_ssd > 1.0
+    assert s_ram > 1.0
+
+
+def test_smooth_hinge_and_square_losses_finite():
+    key = jax.random.PRNGKey(3)
+    X, y, _ = synth_classification(key, 64, 8)
+    for loss in ("square", "smooth_hinge"):
+        prob = ERMProblem(loss=loss, reg=1e-2)
+        w = jnp.ones(8)
+        assert bool(jnp.isfinite(prob.objective(w, X, y)))
+        assert bool(jnp.all(jnp.isfinite(prob.full_grad(w, X, y))))

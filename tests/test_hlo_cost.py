@@ -1,0 +1,98 @@
+"""Loop-aware HLO cost engine tests (the roofline's data source)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze, HloCostModel
+from repro.launch.hlo_analysis import collective_bytes
+
+
+def _compile(fn, *shapes):
+    return jax.jit(fn).lower(*shapes).compile().as_text()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def body(c, w):
+        return c @ w, None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    res = analyze(_compile(scanned, x, ws), 1)
+    expect = 8 * 2 * 256 ** 3
+    assert 0.95 * expect < res["flops"] < 1.1 * expect
+
+
+def test_unrolled_matches_scanned_flops():
+    def unrolled(x, ws):
+        for i in range(8):
+            x = x @ ws[i]
+        return x
+
+    def scanned(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    f_u = analyze(_compile(unrolled, x, ws), 1)["flops"]
+    f_s = analyze(_compile(scanned, x, ws), 1)["flops"]
+    assert abs(f_u - f_s) / f_u < 0.1, (f_u, f_s)
+
+
+def test_nested_scan_multiplies():
+    def inner(c, w):
+        return c @ w, None
+
+    def outer(c, ws):
+        out, _ = jax.lax.scan(inner, c, ws)
+        return out, None
+
+    def fn(x, ws):
+        return jax.lax.scan(outer, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 5, 64, 64), jnp.float32)  # 15 matmuls
+    res = analyze(_compile(fn, x, ws), 1)
+    expect = 15 * 2 * 64 ** 3
+    assert 0.9 * expect < res["flops"] < 1.3 * expect
+
+
+def test_dot_contracting_dims_parsed():
+    def fn(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    res = analyze(_compile(fn, a, b), 1)
+    expect = 2 * 4 * 32 * 16 * 64
+    assert 0.9 * expect < res["flops"] < 1.2 * expect
+
+
+def test_collective_parse_ring_multipliers():
+    hlo = """
+ENTRY %main (p: f32[128]) -> f32[128] {
+  %p = f32[128]{0} parameter(0)
+  ROOT %ar = f32[128]{0} all-reduce(%p), replica_groups=[1,8]<=[8], to_apply=%add
+}
+"""
+    stats = collective_bytes(hlo, 8)
+    # all-reduce: 2 * size * (n-1)/n = 2*512*7/8 = 896
+    assert abs(stats.by_kind["all-reduce"] - 896.0) < 1e-6
+
+
+def test_dus_counts_slice_bytes_only_when_donated():
+    def fn(buf, upd):
+        return jax.lax.dynamic_update_slice(buf, upd, (0, 0))
+
+    buf = jax.ShapeDtypeStruct((4096, 128), jnp.float32)
+    upd = jax.ShapeDtypeStruct((1, 128), jnp.float32)
+    # donated buffer -> in-place DUS -> only the slice is touched
+    txt = jax.jit(fn, donate_argnums=(0,)).lower(buf, upd).compile().as_text()
+    res = analyze(txt, 1)
+    assert res["bytes"] < 4096 * 128 * 4 * 0.5, res["bytes"]
+    # non-donated: XLA materialises a full copy; the engine must see it
+    res2 = analyze(_compile(fn, buf, upd), 1)
+    assert res2["bytes"] > res["bytes"]

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward + one train step on CPU, assert output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import model_api
+from repro.models.config import param_count, active_param_count
+from repro.models.model_api import ShapeSpec
+from repro.optim.adamw import AdamW
+from repro.train.train_loop import make_train_step
+
+TRAIN = ShapeSpec("t", "train", 64, 2)
+PREFILL = ShapeSpec("p", "prefill", 64, 2)
+DECODE = ShapeSpec("d", "decode", 64, 2)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_train_step(arch, key):
+    cfg = configs.smoke(arch)
+    fam = model_api.family(cfg)
+    params = fam.init(key, cfg)
+    batch = model_api.make_batch(cfg, TRAIN, key)
+
+    loss = fam.loss(params, cfg, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: NaN loss"
+
+    opt = AdamW(lr=1e-3)
+    step = make_train_step(cfg, opt)
+    loss2, params2, opt_state = step(params, opt.init(params), batch)
+    assert bool(jnp.isfinite(loss2))
+    for p in jax.tree.leaves(params2):
+        assert bool(jnp.all(jnp.isfinite(p))), f"{arch}: NaN params after step"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_prefill_shapes(arch, key):
+    cfg = configs.smoke(arch)
+    fam = model_api.family(cfg)
+    params = fam.init(key, cfg)
+    batch = model_api.make_batch(cfg, PREFILL, key)
+    logits, cache = fam.prefill(params, cfg, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN prefill"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_step(arch, key):
+    cfg = configs.smoke(arch)
+    fam = model_api.family(cfg)
+    spec = model_api.SHAPES["decode_32k"]
+    if model_api.supports(cfg, spec) and cfg.family == "encoder":
+        pytest.skip("encoder-only: no decode")
+    params = fam.init(key, cfg)
+    batch = model_api.make_batch(cfg, DECODE, key)
+    logits, cache = fam.decode_step(params, cfg, batch["tokens"],
+                                    batch["pos"], batch["cache"])
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN decode"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the assignment-exact hyperparameters."""
+    cfg = configs.get(arch)
+    expected = {
+        "qwen3-moe-235b-a22b": dict(n_layers=94, d_model=4096, n_heads=64,
+                                    n_kv_heads=4, d_ff=1536, vocab=151936,
+                                    n_experts=128, top_k=8),
+        "qwen3-moe-30b-a3b": dict(n_layers=48, d_model=2048, n_heads=32,
+                                  n_kv_heads=4, d_ff=768, vocab=151936,
+                                  n_experts=128, top_k=8),
+        "yi-6b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+                      d_ff=11008, vocab=64000),
+        "stablelm-3b": dict(n_layers=32, d_model=2560, n_heads=32,
+                            n_kv_heads=32, d_ff=6912, vocab=50304),
+        "qwen3-4b": dict(n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8,
+                         d_ff=9728, vocab=151936, qk_norm=True),
+        "qwen2.5-32b": dict(n_layers=64, d_model=5120, n_heads=40,
+                            n_kv_heads=8, d_ff=27648, vocab=152064,
+                            qkv_bias=True),
+        "internvl2-26b": dict(n_layers=48, d_model=6144, n_heads=48,
+                              n_kv_heads=8, d_ff=16384, vocab=92553),
+        "recurrentgemma-2b": dict(n_layers=26, d_model=2560, n_heads=10,
+                                  n_kv_heads=1, d_ff=7680, vocab=256000,
+                                  attn_window=2048),
+        "mamba2-370m": dict(n_layers=48, d_model=1024, vocab=50280,
+                            ssm_state=128),
+        "hubert-xlarge": dict(n_layers=48, d_model=1280, n_heads=16,
+                              n_kv_heads=16, d_ff=5120, vocab=504),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_param_counts_in_expected_range():
+    """Sanity of 6ND inputs: param_count within ~25% of the nameplate size."""
+    expect = {
+        "qwen3-moe-235b-a22b": 235e9, "qwen3-moe-30b-a3b": 30e9,
+        "yi-6b": 6e9, "qwen2.5-32b": 32.5e9,
+    }
+    for arch, n in expect.items():
+        got = param_count(configs.get(arch))
+        assert 0.7 * n < got < 1.3 * n, f"{arch}: {got:.3g} vs {n:.3g}"
+    a22 = active_param_count(configs.get("qwen3-moe-235b-a22b"))
+    assert 15e9 < a22 < 30e9  # ~22B active

@@ -1,0 +1,97 @@
+"""§Perf optimization variants: numerics + selectability tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels import ref
+from repro.models import model_api, moe as moe_lib
+from repro.models.chunked_attention import chunked_attention
+from repro.models.lean_attention import lean_attention
+from repro.models.model_api import ShapeSpec
+
+KEY = jax.random.PRNGKey(0)
+TRAIN = ShapeSpec("t", "train", 64, 2)
+
+
+@pytest.mark.parametrize("impl", ["lean", "chunked"])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48), (False, 0)])
+def test_attention_variant_fwd_and_grad_match_ref(impl, causal, window):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    dout = jax.random.normal(ks[3], (2, 128, 4, 32))
+    fn = (lambda q, k, v: lean_attention(q, k, v, causal=causal,
+                                         window=window)) if impl == "lean" \
+        else (lambda q, k, v: chunked_attention(q, k, v, causal=causal,
+                                                window=window, block=32))
+    o = fn(q, k, v)
+    r = ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=5e-5)
+    g1 = jax.grad(lambda *a: jnp.vdot(fn(*a), dout), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: jnp.vdot(ref.attention(
+        *a, causal=causal, window=window), dout), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+def test_grouped_moe_equals_global_when_dropless():
+    cfg = configs.smoke("qwen3-moe-30b-a3b").with_(capacity_factor=8.0)
+    params = moe_lib.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (3, 16, cfg.d_model)) * 0.5
+    y1, a1 = moe_lib.moe_apply(params, cfg, x)
+    y2, a2 = moe_lib.moe_apply_grouped(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+
+
+@pytest.mark.parametrize("cf", [8.0, 0.8])  # dropless AND with token drops
+def test_scatter_combine_equals_gather_combine(cf):
+    cfg = configs.smoke("qwen3-moe-30b-a3b").with_(capacity_factor=cf,
+                                                   moe_grouped=True)
+    params = moe_lib.moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 16, cfg.d_model)) * 0.5
+    y1, _ = moe_lib.moe_apply(params, cfg, x)
+    y2, _ = moe_lib.moe_apply(params, cfg.with_(moe_combine="scatter"), x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+    g = jax.grad(lambda p: moe_lib.moe_apply(
+        p, cfg.with_(moe_combine="scatter"), x)[0].sum())(params)
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in jax.tree.leaves(g))
+
+
+@pytest.mark.parametrize("overrides", [
+    {"attn_impl": "xla_lean"},
+    {"attn_impl": "xla_chunked", "attn_block": 32},
+    {"attn_impl": "xla_lean", "attn_shard": "seq"},
+    {"moe_grouped": True},
+])
+def test_variant_configs_train_step(overrides):
+    arch = "qwen3-moe-30b-a3b" if "moe_grouped" in overrides else "qwen3-4b"
+    cfg = configs.smoke(arch).with_(**overrides)
+    fam = model_api.family(cfg)
+    params = fam.init(KEY, cfg)
+    batch = model_api.make_batch(cfg, TRAIN, KEY)
+    loss, grads = jax.value_and_grad(lambda p: fam.loss(p, cfg, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+
+
+def test_lean_variant_matches_baseline_model_loss():
+    cfg0 = configs.smoke("qwen3-4b")
+    cfg1 = cfg0.with_(attn_impl="xla_lean")
+    fam = model_api.family(cfg0)
+    params = fam.init(KEY, cfg0)
+    batch = model_api.make_batch(cfg0, TRAIN, KEY)
+    l0 = float(fam.loss(params, cfg0, batch))
+    l1 = float(fam.loss(params, cfg1, batch))
+    assert abs(l0 - l1) < 1e-4, (l0, l1)
+
+
+def test_inference_rules_table():
+    from repro.distributed import sharding
+    r = sharding.get_rules("inference")
+    assert r["embed"] == ()           # no FSDP at serving time
+    assert r["seq_kv"] == ("model",)  # context-parallel KV cache
+    assert sharding.get_rules("default")["embed"] == ("data",)

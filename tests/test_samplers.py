@@ -1,0 +1,96 @@
+"""Sampler unit + property tests (paper §2 definitions)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import samplers
+
+
+SCHEMES = list(samplers.SCHEMES)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_epoch_covers_all_points_without_replacement(scheme):
+    l, b = 103, 10
+    idx = samplers.epoch_indices(scheme, jax.random.PRNGKey(0), l, b)
+    m = samplers.num_batches(l, b)
+    assert idx.shape == (m, b)
+    flat = np.asarray(idx).ravel()
+    # padded up to m*b with wraparound; every point appears at least once
+    assert set(range(l)) <= set(flat.tolist())
+
+
+def test_cyclic_is_sequential():
+    idx = samplers.epoch_indices(samplers.CYCLIC, jax.random.PRNGKey(0), 20, 5)
+    assert np.array_equal(np.asarray(idx),
+                          np.arange(20).reshape(4, 5))
+
+
+def test_systematic_blocks_are_contiguous_and_permuted():
+    key = jax.random.PRNGKey(1)
+    idx = np.asarray(samplers.epoch_indices(samplers.SYSTEMATIC, key, 20, 5))
+    starts = idx[:, 0]
+    for row, s in zip(idx, starts):
+        assert np.array_equal(row, (s + np.arange(5)) % 20)
+    assert set(starts.tolist()) == {0, 5, 10, 15}
+
+
+def test_paper_example_shapes():
+    """The paper's S={1..20}, m=5 example: 4 mini-batches per scheme."""
+    for scheme in SCHEMES:
+        idx = samplers.epoch_indices(scheme, jax.random.PRNGKey(7), 20, 5)
+        assert idx.shape == (4, 5)
+
+
+@given(l=st.integers(2, 500), b=st.integers(1, 64), seed=st.integers(0, 2**30))
+@settings(max_examples=30, deadline=None)
+def test_host_sampler_matches_restore(l, b, seed):
+    """(seed, step) fully determines the schedule — the checkpoint property."""
+    s1 = samplers.make_sampler(samplers.SYSTEMATIC, seed, l, b)
+    seq = []
+    for _ in range(5):
+        idx, s1 = samplers.next_batch(s1)
+        seq.append(idx)
+    s2 = samplers.restore(samplers.SYSTEMATIC, seed, 2, l, b)
+    idx2, _ = samplers.next_batch(s2)
+    assert np.array_equal(idx2, seq[2])
+
+
+@given(scheme=st.sampled_from(SCHEMES), l=st.integers(10, 300),
+       b=st.integers(1, 32), seed=st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_epoch_partition_property(scheme, l, b, seed):
+    """Without replacement, one epoch visits every point >= floor(mb/l) times
+    and at most ceil(mb/l)+1 (wraparound padding)."""
+    s = samplers.make_sampler(scheme, seed, l, b)
+    m = s.m
+    counts = np.zeros(l, np.int64)
+    for _ in range(m):
+        idx, s = samplers.next_batch(s)
+        counts[idx] += 1
+    assert counts.min() >= 1
+    assert counts.max() <= int(np.ceil(m * b / l)) + 1
+
+
+def test_block_starts_are_batch_aligned():
+    starts = samplers.batch_slice_starts(samplers.SYSTEMATIC,
+                                         jax.random.PRNGKey(0), 100, 10)
+    assert np.all(np.asarray(starts) % 10 == 0)
+
+
+def test_contiguous_fast_path_matches_full_indices():
+    s = samplers.make_sampler(samplers.SYSTEMATIC, 3, 60, 6)
+    s2 = samplers.make_sampler(samplers.SYSTEMATIC, 3, 60, 6)
+    for _ in range(10):
+        idx, s = samplers.next_batch(s)
+        start, s2 = samplers.next_block_start(s2)
+        assert np.array_equal(idx, (start + np.arange(6)) % 60)
+
+
+def test_random_with_replacement_is_deterministic_per_step():
+    s = samplers.make_sampler(samplers.RANDOM, 5, 50, 8, with_replacement=True)
+    a, s1 = samplers.next_batch(s)
+    b, _ = samplers.next_batch(s)
+    assert np.array_equal(a, b)
