@@ -40,10 +40,10 @@ def host_bench(tmp: Path, rows=200_000, features=100, batch=1000):
     for scheme in samplers.SCHEMES:
         p = pipeline.DataPipeline(pipeline.PipelineConfig(
             corpus=corpus, batch_size=batch, sampling=scheme, prefetch=0))
-        _time(p._read_batch, n=50, warmup=5)
+        _time(p.read_batch, n=50, warmup=5)
         p.stats = pipeline.AccessStats()
         for _ in range(100):
-            p._read_batch()
+            p.read_batch()
         out[scheme] = p.stats.s_per_batch
     return out
 

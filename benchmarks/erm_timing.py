@@ -2,18 +2,30 @@
 2 step rules x 3 sampling schemes on a memmapped dataset.
 
 The paper's regime exactly: data streams from storage each epoch (mini-batch
-reads dominated by access pattern), solver update jit'd on device. Default
-scale is a laptop-class reduction (the paper used 11M-point HIGGS on a
-MacBook; CI-friendly defaults reproduce the *ratios*, and --rows/--epochs
-scale it up).
+reads dominated by access pattern), solver update jit'd on device.  Since the
+fused epoch engine, the hot path is three overlapped tiers:
 
-Output CSV: name,us_per_call,derived where name =
+  disk -> host      DataPipeline prefetch thread (access time)
+  host -> device    DeviceStager double buffering   (H2D time)
+  device            make_epoch_fn: ONE jit call lax.scans a whole chunk of
+                    K mini-batches with donated solver state (compute time)
+
+so per-batch Python dispatch no longer drowns the access-pattern signal the
+paper is about.  The access/H2D/compute breakdown per scheme is printed and
+written to ``BENCH_erm.json`` so the perf trajectory is tracked across PRs.
+
+Output CSV (stdout): name,us_per_call,derived where name =
 erm_<solver>_<stepmode>_<scheme>, us_per_call = training time per epoch
-(us), derived = final objective + speedup vs RS.
+(us), derived = final objective + breakdown + speedup vs RS.
+
+Default scale is a laptop-class reduction (the paper used 11M-point HIGGS on
+a MacBook; CI-friendly defaults reproduce the *ratios*, and --rows/--epochs
+scale it up).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from pathlib import Path
 
@@ -24,13 +36,22 @@ import numpy as np
 from repro.core import samplers
 from repro.core.erm import ERMProblem
 from repro.core.solvers import (CONSTANT, LINE_SEARCH, SOLVERS, SolverConfig,
-                                epoch_begin, init_state, make_step_fn,
+                                epoch_begin, init_state, make_epoch_fn,
                                 streaming_full_grad)
 from repro.data import dataset, pipeline
 
+DEFAULT_JSON = Path(__file__).resolve().parent / "BENCH_erm.json"
+_CHUNK_BYTE_BUDGET = 64 << 20   # per staged chunk, when --chunk is unset
+
 
 def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
-            batch: int, epochs: int, reg: float = 1e-4):
+            batch: int, epochs: int, reg: float = 1e-4,
+            chunk: int | None = None, prefetch: int = 2):
+    """Train and time one (solver, step rule, scheme) cell.
+
+    Returns a result dict with the per-epoch wall time and its
+    access/H2D/compute decomposition.
+    """
     mm, meta = dataset.open_corpus(corpus)
     l, n = meta.rows, meta.row_dim - 1
     prob = ERMProblem(loss="logistic", reg=reg)
@@ -41,11 +62,45 @@ def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
     cfg = SolverConfig(solver=solver, step_mode=step_mode,
                        step_size=step_size)
     m = samplers.num_batches(l, batch)
+    if chunk is None:
+        # default: whole epoch per device call, but bounded so staging
+        # buffers stay modest at --rows scale-up (depth-2 double buffering
+        # keeps ~3 chunks in flight); explicit --chunk overrides
+        chunk = max(1, _CHUNK_BYTE_BUDGET // (batch * (n + 1) * 4))
+    K = max(1, min(chunk, m))             # batches per device call
     state = init_state(solver, jnp.zeros(n, jnp.float32), m)
-    step_fn = make_step_fn(prob, cfg)
+    epoch_fn = make_epoch_fn(prob, cfg)
 
     pipe = pipeline.DataPipeline(pipeline.PipelineConfig(
-        corpus=corpus, batch_size=batch, sampling=scheme, prefetch=0))
+        corpus=corpus, batch_size=batch, sampling=scheme, prefetch=prefetch))
+
+    def host_chunks():
+        """Group the batch stream into <=K-batch chunks, never crossing an
+        epoch boundary (snapshot solvers refresh state between epochs).
+        Batches are written straight into contiguous (K, b, n) staging
+        buffers — one copy, not stack-then-slice."""
+        it = iter(pipe)
+        step, total = 0, m * epochs
+        while step < total:
+            j0 = step % m
+            k = min(K, m - j0)
+            Xc = np.empty((k, batch, n), np.float32)
+            yc = np.empty((k, batch), np.float32)
+            for i in range(k):
+                rows = next(it)
+                Xc[i] = rows[:, :n]
+                yc[i] = rows[:, n]
+            yield Xc, yc, j0
+            step += k
+
+    def convert(arg):
+        Xc, yc, j0 = arg
+        js = (np.arange(j0, j0 + Xc.shape[0]) % m).astype(np.int32)
+        return Xc, yc, js
+
+    def put(host):
+        return jax.block_until_ready(
+            tuple(jax.device_put(a) for a in host))
 
     def full_grad_stream(w, data_term_only=False):
         def batches():
@@ -55,23 +110,39 @@ def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
         return streaming_full_grad(prob, w, batches(),
                                    data_term_only=data_term_only)
 
-    # warmup compile outside the timed region
-    rows = pipe._read_batch()
-    Xb, yb = jnp.asarray(rows[:, :n]), jnp.asarray(rows[:, n])
-    jax.block_until_ready(step_fn(state, Xb, yb, jnp.asarray(0)))
+    # warmup: compile every chunk shape outside the timed region
+    for k in sorted({K, m % K} - {0}):
+        dummy = init_state(solver, jnp.zeros(n, jnp.float32), m)
+        jax.block_until_ready(epoch_fn(
+            dummy, jnp.zeros((k, batch, n), jnp.float32),
+            jnp.zeros((k, batch), jnp.float32), jnp.zeros((k,), jnp.int32)))
+    if solver in ("svrg", "saag2"):
+        # the snapshot full-grad stream compiles too — keep it out of epoch 1
+        jax.block_until_ready(full_grad_stream(
+            jnp.zeros(n, jnp.float32), data_term_only=(solver == "saag2")))
 
+    stager = pipeline.DeviceStager(host_chunks(), put=put, convert=convert,
+                                   depth=2, stats=pipe.stats)
+    chunks_iter = iter(stager)
+    compute_s = 0.0
     t0 = time.perf_counter()
-    for _ in range(epochs):
-        if solver in ("svrg", "saag2"):
-            state = epoch_begin(prob, cfg, state, lambda w: full_grad_stream(
-                w, data_term_only=(solver == "saag2")))
-        for j in range(m):
-            rows = pipe._read_batch()
-            Xb = jnp.asarray(rows[:, :n])
-            yb = jnp.asarray(rows[:, n])
-            state = step_fn(state, Xb, yb, jnp.asarray(j % m))
-    jax.block_until_ready(state.w)
-    train_s = time.perf_counter() - t0
+    try:
+        for _ in range(epochs):
+            if solver in ("svrg", "saag2"):
+                state = epoch_begin(prob, cfg, state, lambda w: full_grad_stream(
+                    w, data_term_only=(solver == "saag2")))
+            done = 0
+            while done < m:
+                Xc, yc, js = next(chunks_iter)
+                tc = time.perf_counter()
+                state = epoch_fn(state, Xc, yc, js)
+                jax.block_until_ready(state.w)
+                compute_s += time.perf_counter() - tc
+                done += Xc.shape[0]
+        train_s = time.perf_counter() - t0
+    finally:
+        stager.close()
+        pipe.close()
 
     # final objective over the full dataset (streamed)
     obj = 0.0
@@ -80,29 +151,53 @@ def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
         obj += float(prob.data_objective(state.w, jnp.asarray(rows[:, :n]),
                                          jnp.asarray(rows[:, n]))) * rows.shape[0]
     obj = obj / l + 0.5 * reg * float(jnp.dot(state.w, state.w))
-    return train_s, obj, pipe.stats.s_per_batch
+
+    st = pipe.stats
+    return {
+        "name": f"erm_{solver}_{step_mode}_{scheme}",
+        "solver": solver, "step_mode": step_mode, "scheme": scheme,
+        "epochs": epochs, "chunk": K,
+        "epoch_s": train_s / epochs,
+        "access_s_per_epoch": st.s_per_batch * m,       # producer thread
+        "h2d_s_per_epoch": st.h2d_s / max(st.staged, 1) * (-(-m // K)),
+        "compute_s_per_epoch": compute_s / epochs,      # device (blocked)
+        "objective": obj,
+    }
 
 
 def main(rows=100_000, features=64, batch=500, epochs=3,
-         solvers_=SOLVERS, corpus_dir=Path("artifacts/bench")):
+         solvers_=SOLVERS, corpus_dir=Path("artifacts/bench"),
+         chunk=None, json_out=None):
     corpus_dir.mkdir(parents=True, exist_ok=True)
     corpus = corpus_dir / f"erm_{rows}x{features}.bin"
     if not corpus.exists():
         dataset.synth_erm_corpus(corpus, rows=rows, features=features)
-    out = []
+    out, results = [], []
     for solver in solvers_:
         for step_mode in (CONSTANT, LINE_SEARCH):
             times = {}
             for scheme in samplers.SCHEMES:
-                t, obj, access = run_one(corpus, solver, step_mode, scheme,
-                                         batch=batch, epochs=epochs)
-                times[scheme] = t
-                out.append((f"erm_{solver}_{step_mode}_{scheme}",
-                            t / epochs * 1e6,
-                            f"objective={obj:.10f};access_ms={access*1e3:.3f};"
-                            f"speedup_vs_rs="
-                            + (f"{times['random']/t:.2f}"
-                               if "random" in times else "1.00")))
+                r = run_one(corpus, solver, step_mode, scheme,
+                            batch=batch, epochs=epochs, chunk=chunk)
+                times[scheme] = r["epoch_s"]
+                r["speedup_vs_rs"] = (times["random"] / r["epoch_s"]
+                                      if "random" in times else 1.0)
+                results.append(r)
+                out.append((r["name"], r["epoch_s"] * 1e6,
+                            f"objective={r['objective']:.10f};"
+                            f"access_ms={r['access_s_per_epoch']*1e3:.3f};"
+                            f"h2d_ms={r['h2d_s_per_epoch']*1e3:.3f};"
+                            f"compute_ms={r['compute_s_per_epoch']*1e3:.3f};"
+                            f"speedup_vs_rs={r['speedup_vs_rs']:.2f}"))
+    if json_out:
+        payload = {
+            "meta": {"schema": 1, "rows": rows, "features": features,
+                     "batch": batch, "epochs": epochs,
+                     "backend": jax.default_backend(),
+                     "unit": "seconds per epoch"},
+            "results": results,
+        }
+        Path(json_out).write_text(json.dumps(payload, indent=2) + "\n")
     return out
 
 
@@ -112,6 +207,16 @@ if __name__ == "__main__":
     ap.add_argument("--features", type=int, default=64)
     ap.add_argument("--batch", type=int, default=500)
     ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="batches per device call (default: whole epoch)")
+    ap.add_argument("--solvers", type=str, default=",".join(SOLVERS),
+                    help="comma-separated subset of " + ",".join(SOLVERS))
+    ap.add_argument("--json-out", type=Path, default=None,
+                    help=f"write the breakdown JSON here; opt-in so ad-hoc "
+                         f"runs don't clobber the committed {DEFAULT_JSON.name}")
     a = ap.parse_args()
-    for name, us, derived in main(a.rows, a.features, a.batch, a.epochs):
+    sel = tuple(s for s in a.solvers.split(",") if s)
+    for name, us, derived in main(a.rows, a.features, a.batch, a.epochs,
+                                  solvers_=sel, chunk=a.chunk,
+                                  json_out=a.json_out):
         print(f"{name},{us:.2f},{derived}")

@@ -99,6 +99,14 @@ class SamplerState:
     ``seed`` fixes the whole schedule; ``step`` is the global batch counter.
     Any host can reconstruct any other host's schedule from ``(seed, step)``
     alone — the property the fault-tolerance layer relies on.
+
+    ``_memo`` caches the current epoch's O(l) shuffle so stepping is O(b)
+    amortized per batch, not O(l).  It is pure derived data (a function of
+    (seed, epoch) only), excluded from comparison, carried across
+    ``dataclasses.replace`` steps by reference, and never serialized — so
+    determinism and checkpoint/restore semantics are untouched.  Being
+    per-sampler, concurrent pipelines (multi-host emulation) never thrash
+    each other, and the memory dies with the sampler.
     """
     scheme: str
     seed: int
@@ -106,6 +114,8 @@ class SamplerState:
     l: int
     batch_size: int
     with_replacement: bool = False
+    _memo: dict = dataclasses.field(default_factory=dict, compare=False,
+                                    repr=False)
 
     @property
     def m(self) -> int:
@@ -129,27 +139,48 @@ def make_sampler(scheme: str, seed: int, l: int, batch_size: int,
     return SamplerState(scheme, seed, 0, l, batch_size, with_replacement)
 
 
-def _epoch_rng(state: SamplerState) -> np.random.Generator:
-    return np.random.default_rng(np.random.SeedSequence([state.seed, state.epoch]))
+def _epoch_perm(state: SamplerState, size: int) -> np.ndarray:
+    """This epoch's permutation of ``size`` (rows for RS, block starts for
+    SS) over the ``SeedSequence([seed, epoch])`` stream — unchanged from the
+    pre-memoization code, so checkpointed schedules replay identically.
+
+    Memoized on the sampler: recomputing an O(l) shuffle for EVERY batch
+    made "access time" in the benchmarks mostly sampler time (7x the actual
+    scattered read at l=100k).  Only the current epoch's permutation is
+    retained; read-only so every batch of the epoch can share it.
+    """
+    key = (state.epoch, size)
+    perm = state._memo.get(key)
+    if perm is None:
+        perm = np.random.default_rng(
+            np.random.SeedSequence([state.seed, state.epoch])).permutation(size)
+        perm.setflags(write=False)
+        state._memo.clear()          # previous epoch is never needed again
+        state._memo[key] = perm
+    return perm
 
 
 def next_batch(state: SamplerState) -> Tuple[np.ndarray, SamplerState]:
-    """Return (indices (b,), new_state). Host-side numpy; O(m) not O(l) for SS."""
+    """Return (indices (b,), new_state). Host-side numpy; per-epoch shuffles
+    are memoized so the amortized cost is O(b), not O(l), per batch."""
     j = state.batch_in_epoch
     b, l, m = state.batch_size, state.l, state.m
     if state.scheme == CYCLIC:
         idx = (np.arange(j * b, (j + 1) * b, dtype=np.int64)) % l
     elif state.scheme == SYSTEMATIC:
-        starts = _epoch_rng(state).permutation(m) * b
-        idx = (starts[j] + np.arange(b, dtype=np.int64)) % l
+        start = int(_epoch_perm(state, m)[j]) * b
+        idx = (start + np.arange(b, dtype=np.int64)) % l
     elif state.with_replacement:
         # fresh draw per batch, but deterministic in (seed, step)
         rng = np.random.default_rng(np.random.SeedSequence([state.seed, state.step]))
         idx = rng.integers(0, l, size=b)
     else:
-        perm = _epoch_rng(state).permutation(l)
-        perm = np.concatenate([perm, perm[: m * b - l]])
-        idx = perm[j * b:(j + 1) * b]
+        perm = _epoch_perm(state, l)
+        lo, hi = j * b, (j + 1) * b
+        if hi <= l:
+            idx = perm[lo:hi]
+        else:  # wrap-around padding for the trailing batch
+            idx = np.concatenate([perm[lo:], perm[: hi - l]])
     return idx.astype(np.int64), dataclasses.replace(state, step=state.step + 1)
 
 
@@ -158,8 +189,8 @@ def next_block_start(state: SamplerState) -> Tuple[int, SamplerState]:
     if state.scheme == CYCLIC:
         start = state.batch_in_epoch * state.batch_size
     elif state.scheme == SYSTEMATIC:
-        starts = _epoch_rng(state).permutation(state.m) * state.batch_size
-        start = int(starts[state.batch_in_epoch])
+        starts = _epoch_perm(state, state.m)
+        start = int(starts[state.batch_in_epoch]) * state.batch_size
     else:
         raise ValueError("random sampling has no block structure")
     return start, dataclasses.replace(state, step=state.step + 1)

@@ -14,6 +14,11 @@ reconstruct its position without coordination (straggler/elastic story).
 A background prefetch thread overlaps disk access with the train step; the
 measured access time per batch is recorded so the paper's access-time claims
 are observable in production telemetry, not just microbenchmarks.
+
+:class:`DeviceStager` adds the second overlap tier: while the device computes
+on batch k, a staging thread converts and copies batch k+1 host->device
+(double buffering), and the H2D time lands in :class:`AccessStats` next to
+the disk-access time so the full access/H2D/compute breakdown is observable.
 """
 from __future__ import annotations
 
@@ -47,15 +52,27 @@ class AccessStats:
     batches: int = 0
     access_s: float = 0.0
     bytes_read: int = 0
+    staged: int = 0          # batches copied host->device
+    h2d_s: float = 0.0       # time spent in host->device staging
+    bytes_staged: int = 0
 
     def record(self, dt: float, nbytes: int):
         self.batches += 1
         self.access_s += dt
         self.bytes_read += nbytes
 
+    def record_h2d(self, dt: float, nbytes: int):
+        self.staged += 1
+        self.h2d_s += dt
+        self.bytes_staged += nbytes
+
     @property
     def s_per_batch(self) -> float:
         return self.access_s / max(self.batches, 1)
+
+    @property
+    def h2d_s_per_batch(self) -> float:
+        return self.h2d_s / max(self.staged, 1)
 
 
 class DataPipeline:
@@ -82,6 +99,21 @@ class DataPipeline:
                 "batch_size": self.cfg.batch_size}
 
     # ---- synchronous read ----------------------------------------------
+    def read_batch(self) -> np.ndarray:
+        """Public synchronous read.
+
+        Refuses to run while the prefetch producer thread owns the sampler:
+        a concurrent ``_read_batch`` would race on ``self.sampler`` and
+        silently skew the schedule.  Consume via ``iter(self)`` instead, or
+        build the pipeline with ``prefetch=0``.
+        """
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError(
+                "prefetch producer is active; reading synchronously would "
+                "race on sampler state — iterate the pipeline or use "
+                "prefetch=0")
+        return self._read_batch()
+
     def _read_batch(self) -> np.ndarray:
         t0 = time.perf_counter()
         if self.sampler.scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
@@ -115,6 +147,12 @@ class DataPipeline:
         if self.cfg.prefetch <= 0:
             while True:
                 yield self._read_batch()
+        if self._thread is not None and self._thread.is_alive():
+            # same invariant read_batch() guards: two producers would race
+            # on sampler state and corrupt the deterministic schedule
+            raise RuntimeError(
+                "prefetch producer already running; close() this pipeline "
+                "before iterating it again")
         self._q = queue.Queue(maxsize=self.cfg.prefetch)
         self._stop.clear()
         self._thread = threading.Thread(target=self._producer, daemon=True)
@@ -155,6 +193,115 @@ def make_global_batch(pipelines, to_device=None):
 
     On a real cluster each host feeds only its shard via
     ``jax.make_array_from_process_local_data``; here we emulate by stacking.
+    Uses the guarded :meth:`DataPipeline.read_batch`, which raises if a
+    prefetch producer owns the sampler (the old direct ``_read_batch`` call
+    raced with it and corrupted the schedule).
     """
-    rows = np.concatenate([p._read_batch() for p in pipelines], axis=0)
+    rows = np.concatenate([p.read_batch() for p in pipelines], axis=0)
     return rows if to_device is None else to_device(rows)
+
+
+class DeviceStager:
+    """Double-buffered host->device staging over any host batch iterator.
+
+    While the consumer computes on batch k, a staging thread pulls batch
+    k+1 from ``source``, applies ``convert`` (e.g. rows -> (X, y)), and
+    runs ``put`` (e.g. ``jax.device_put`` + block) so the H2D copy overlaps
+    compute.  ``depth`` bounds the number of staged batches in flight
+    (2 = classic double buffering).  The pipeline layer stays numpy-only:
+    jax enters through the injected ``put`` callable.
+
+    H2D time/bytes are recorded into ``stats`` (an :class:`AccessStats`)
+    alongside the disk-access numbers, giving the benchmark its
+    access/H2D/compute breakdown.
+    """
+
+    def __init__(self, source: Iterator, put, convert=None, depth: int = 2,
+                 stats: Optional[AccessStats] = None):
+        self.source = source
+        self.put = put
+        self.convert = convert or (lambda x: x)
+        self.depth = max(1, depth)
+        self.stats = stats if stats is not None else AccessStats()
+        self._q: queue.Queue = queue.Queue(maxsize=self.depth)
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+        self._consumed = False
+
+    @staticmethod
+    def _nbytes(tree) -> int:
+        if isinstance(tree, (tuple, list)):
+            return sum(DeviceStager._nbytes(t) for t in tree)
+        return getattr(tree, "nbytes", 0)
+
+    def _producer(self):
+        try:
+            for batch in self.source:
+                if self._stop.is_set():
+                    return
+                host = self.convert(batch)
+                t0 = time.perf_counter()
+                dev = self.put(host)
+                self.stats.record_h2d(time.perf_counter() - t0,
+                                      self._nbytes(host))
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(dev, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # surfaced to the consumer
+            self._err = e
+        finally:
+            while True:
+                try:
+                    self._q.put(_STAGER_DONE, timeout=0.1)
+                    return
+                except queue.Full:
+                    if self._stop.is_set():
+                        return
+
+    def __iter__(self):
+        # single-use: a second producer over the same source would
+        # interleave batches nondeterministically, and resuming after
+        # close() would silently drop staged batches
+        if self._consumed:
+            raise RuntimeError(
+                "DeviceStager is single-use and already iterated; create a "
+                "new stager over a fresh source")
+        self._consumed = True
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+        try:
+            while True:
+                try:
+                    item = self._q.get(timeout=0.1)
+                except queue.Empty:
+                    # close() may have drained the DONE sentinel out from
+                    # under a live consumer; don't block on a dead producer
+                    if self._stop.is_set():
+                        return
+                    continue
+                if item is _STAGER_DONE:
+                    if self._err is not None:
+                        raise self._err
+                    return
+                yield item
+        finally:
+            self.close()
+
+    def close(self):
+        self._stop.set()
+        if self._q is not None:
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+            self._thread = None
+
+
+_STAGER_DONE = object()

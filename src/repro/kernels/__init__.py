@@ -1,10 +1,12 @@
 """Pallas TPU kernels (validated in interpret mode on CPU):
 
   sampled_gather  the paper's contribution at the HBM->VMEM tier
+  fused_erm       sampled gather FUSED with the ERM gradient — the epoch
+                  engine's hot path; the mini-batch never lands in HBM
   flash_attention online-softmax attention for the GQA archs
   ssd             Mamba2 state-space-dual chunked scan
   rglru_scan      RecurrentGemma RG-LRU linear recurrence
 
-Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
-EXAMPLE.md documents the layout convention.
+Each has a pure-jnp oracle (ref.py, or the ERMProblem gather path for
+fused_erm) and a jit'd wrapper.  EXAMPLE.md documents the layout convention.
 """

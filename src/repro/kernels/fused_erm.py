@@ -1,0 +1,245 @@
+"""Fused sampled-gather + ERM gradient kernels — the epoch engine's hot path.
+
+The reference path materializes the mini-batch in HBM before the gradient
+kernel ever sees it: ``gather_batch``/``dynamic_slice`` writes (b, n) rows
+out, then ``ERMProblem.batch_grad`` reads them back.  These kernels fuse the
+two: the sampled rows are DMA'd straight into VMEM and the data-term
+gradient
+
+    g_data = (1/b) * Xb^T s,   s_i = dloss/dz(z_i, y_i),   z = Xb w
+
+comes out the other side without the batch ever existing as an HBM array.
+Both of the paper's access patterns (§2) keep their structural signature:
+
+* :func:`fused_grad_block` (CS/SS): the scalar-prefetched row start drives
+  one contiguous block DMA per feature tile.  A two-phase grid computes the
+  margins z across feature tiles (phase 0) and the per-feature-tile
+  gradient contraction Xb^T s (phase 1) entirely in VMEM.
+* :func:`fused_grad_rows` (RS): a grid of b steps, one (1, n) row DMA each
+  — the per-row descriptor cost that makes RS slow is preserved at the
+  kernel level, the batch materialization is not.
+
+Semantics contract (tested in ``tests/test_fused_erm.py``):
+
+* block: rows ``[start', start'+b)`` with ``start' = min(start, l-b)`` —
+  identical clamping to ``lax.dynamic_slice``/``erm.slice_batch``, so the
+  fused path is interchangeable with the reference CS/SS path including the
+  overlapping last batch when ``l % b != 0``.
+* rows: exactly the rows of ``idx`` (wrap-around indices from
+  ``samplers.epoch_indices`` included), matching ``gather_batch``.
+
+``interpret=None`` auto-selects interpreter mode off-TPU so CPU CI runs the
+same code path that a TPU compiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.erm import ERMProblem, LOGISTIC, SMOOTH_HINGE, SQUARE
+
+LOSSES = (LOGISTIC, SQUARE, SMOOTH_HINGE)
+
+# feature tiles wider than this are split (VMEM budget: b * tile_n floats)
+_MAX_TILE_N = 1024
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> interpret everywhere but real TPU (CPU CI, GPU hosts)."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _dloss(loss: str, z: jax.Array, y: jax.Array) -> jax.Array:
+    """d/dz of the per-example margin loss (matches erm._margin_losses)."""
+    if loss == LOGISTIC:
+        # d/dz log(1+exp(-yz)) = -y * sigmoid(-yz)
+        return -y * jax.nn.sigmoid(-y * z)
+    if loss == SQUARE:
+        return z - y
+    if loss == SMOOTH_HINGE:
+        t = y * z
+        return -y * jnp.where(t >= 1.0, 0.0, jnp.where(t <= 0.0, 1.0, 1.0 - t))
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def _feature_tile(n: int) -> int:
+    """Largest divisor of n in [128, _MAX_TILE_N], else n (single tile).
+
+    Divisibility keeps every tile DMA full-size; tiles below 128 lanes
+    waste the DMA engine, so a pathological n (prime, or only tiny
+    divisors) falls back to one n-wide tile rather than a sliver grid.
+    """
+    if n <= _MAX_TILE_N:
+        return n
+    for tile in range(_MAX_TILE_N, 127, -1):
+        if n % tile == 0:
+            return tile
+    return n
+
+
+# ---------------------------------------------------------------------------
+# CS/SS: one contiguous block, two-phase feature-tiled grid
+# ---------------------------------------------------------------------------
+
+def _block_kernel(loss: str, b: int, tn: int,
+                  start_ref, x_hbm, y_hbm, w_ref, g_ref,
+                  x_vmem, y_vmem, z_ref, s_ref, sems):
+    p = pl.program_id(0)   # 0: accumulate z across tiles, 1: emit gradient
+    t = pl.program_id(1)   # feature tile
+    start = start_ref[0]
+    # ONE contiguous (b, tn) block DMA per (phase, tile) step: HBM -> VMEM.
+    dma = pltpu.make_async_copy(
+        x_hbm.at[pl.ds(start, b), pl.ds(t * tn, tn)], x_vmem, sems.at[0])
+    dma.start()
+
+    @pl.when((p == 0) & (t == 0))
+    def _():
+        # only the b labels of this block ever reach VMEM (y itself is
+        # O(l) and must stay in HBM at real dataset scale)
+        dma_y = pltpu.make_async_copy(
+            y_hbm.at[:, pl.ds(start, b)], y_vmem, sems.at[1])
+        dma_y.start()
+        dma_y.wait()
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    dma.wait()
+
+    @pl.when(p == 0)
+    def _():
+        wt = w_ref[0, pl.ds(t * tn, tn)].reshape(tn, 1)
+        z_ref[...] += jnp.dot(x_vmem[...], wt,
+                              preferred_element_type=jnp.float32).reshape(1, b)
+
+    @pl.when((p == 1) & (t == 0))
+    def _():
+        s_ref[...] = _dloss(loss, z_ref[...], y_vmem[...]) / b
+
+    @pl.when(p == 1)
+    def _():
+        g_ref[0, pl.ds(t * tn, tn)] = jnp.dot(
+            s_ref[...], x_vmem[...],
+            preferred_element_type=jnp.float32).reshape(tn)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loss", "batch_size", "interpret"))
+def fused_grad_block(X: jax.Array, y: jax.Array, w: jax.Array,
+                     start: jax.Array, *, loss: str, batch_size: int,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Data-term gradient of the contiguous batch starting at row ``start``.
+
+    X: (l, n), y: (l,), w: (n,), start: scalar int32 row start (clamped to
+    ``l - batch_size`` like ``dynamic_slice``).  Returns (n,) float32:
+    (1/b) Xb^T dloss(Xb w, yb) — no regularizer (see :func:`fused_batch_grad`).
+    """
+    l, n = X.shape
+    b = batch_size
+    if b > l:
+        raise ValueError(f"batch_size {b} > rows {l}")
+    tn = _feature_tile(n)
+    # clamp BOTH ends like lax.dynamic_slice (negative starts go to 0)
+    start = jnp.clip(start.astype(jnp.int32), 0, l - b).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(2, n // tn),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),    # X stays in HBM
+                  pl.BlockSpec(memory_space=pltpu.ANY),    # y stays in HBM
+                  pl.BlockSpec(memory_space=pltpu.VMEM)],  # w (1, n)
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        scratch_shapes=[pltpu.VMEM((b, tn), jnp.float32),
+                        pltpu.VMEM((1, b), jnp.float32),   # y block
+                        pltpu.VMEM((1, b), jnp.float32),   # z accumulator
+                        pltpu.VMEM((1, b), jnp.float32),   # s = dloss/b
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    g = pl.pallas_call(
+        functools.partial(_block_kernel, loss, b, tn),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(start, X.astype(jnp.float32), y.reshape(1, l).astype(jnp.float32),
+      w.reshape(1, n).astype(jnp.float32))
+    return g.reshape(n).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RS: per-row DMA grid, gradient accumulated across grid steps
+# ---------------------------------------------------------------------------
+
+def _rows_kernel(loss: str, b: int, idx_ref, x_ref, y_ref, w_ref, g_ref):
+    i = pl.program_id(0)   # one sampled row per grid step
+
+    @pl.when(i == 0)
+    def _():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    z = jnp.sum(x_ref[...] * w_ref[...])           # (1, n) . (1, n) -> scalar
+    yi = y_ref[0, 0]
+    s = _dloss(loss, z, yi) / b
+    g_ref[...] += s * x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "interpret"))
+def fused_grad_rows(X: jax.Array, y: jax.Array, w: jax.Array,
+                    idx: jax.Array, *, loss: str,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Data-term gradient of the scattered batch ``X[idx]`` (RS pattern).
+
+    X: (l, n), y: (l,), w: (n,), idx: (b,) int32 row ids.  Grid of b steps,
+    one row DMA each — the kernel-level expression of RS's per-element
+    seek cost.  Returns (n,) float32 data gradient.
+    """
+    l, n = X.shape
+    b = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i, idx_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, idx_ref: (0, idx_ref[i])),
+            pl.BlockSpec((1, n), lambda i, idx_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i, idx_ref: (0, 0)),
+    )
+    g = pl.pallas_call(
+        functools.partial(_rows_kernel, loss, b),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(idx.astype(jnp.int32), X.astype(jnp.float32),
+      y.reshape(1, l).astype(jnp.float32), w.reshape(1, n).astype(jnp.float32))
+    return g.reshape(n).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# solver-facing wrappers (parity contract with the reference gather path)
+# ---------------------------------------------------------------------------
+
+def fused_batch_grad_data(problem: ERMProblem, X, y, w, *, start=None,
+                          idx=None, batch_size=None, interpret=None):
+    """Fused equivalent of ``problem.batch_grad_data(w, *gather(...))``.
+
+    Pass exactly one of ``start`` (contiguous CS/SS block; needs
+    ``batch_size``) or ``idx`` (scattered RS rows).
+    """
+    if (start is None) == (idx is None):
+        raise ValueError("pass exactly one of start= (CS/SS) or idx= (RS)")
+    if start is not None:
+        if batch_size is None:
+            raise ValueError("start= (CS/SS block) also requires batch_size=")
+        return fused_grad_block(X, y, w, start, loss=problem.loss,
+                                batch_size=batch_size, interpret=interpret)
+    return fused_grad_rows(X, y, w, idx, loss=problem.loss,
+                           interpret=interpret)
+
+
+def fused_batch_grad(problem: ERMProblem, X, y, w, **kw):
+    """Fused equivalent of ``problem.batch_grad`` (adds the l2 term)."""
+    return fused_batch_grad_data(problem, X, y, w, **kw) + problem.reg * w

@@ -154,7 +154,7 @@ class Trainer:
         t_start = time.time()
         try:
             while self.step < steps:
-                rows = self.pipeline._read_batch()
+                rows = self.pipeline.read_batch()
                 batch = self.batch_fn(rows) if self.batch_fn else rows
                 batch = {k: jnp.asarray(v) for k, v in batch.items()}
                 loss, params, opt_state = self.step_fn(params, opt_state, batch)

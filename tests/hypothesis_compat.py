@@ -1,0 +1,72 @@
+"""Guarded ``hypothesis`` import so the tier-1 suite collects everywhere.
+
+When ``hypothesis`` is installed, this module re-exports the real
+``given``/``settings``/``strategies``.  When it is not (the CI container
+deliberately avoids extra installs), a minimal vendor-free fallback runs the
+property tests over deterministic pseudo-random draws: same decorator
+surface, seeded ``random.Random`` so failures reproduce, honoring
+``max_examples``.  No shrinking or database — a failing draw prints its
+arguments instead.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def settings(max_examples: int = 20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = (getattr(fn, "_max_examples", None)
+                     or getattr(wrapper, "_max_examples", None) or 20)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = {k: s.example(rng)
+                             for k, s in strategy_kwargs.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception:
+                        print(f"falsifying example: {fn.__name__}({drawn})")
+                        raise
+            # pytest follows __wrapped__ to the original signature and would
+            # treat the drawn parameters as fixtures; hide it
+            wrapper.__dict__.pop("__wrapped__", None)
+            return wrapper
+        return deco

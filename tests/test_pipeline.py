@@ -99,3 +99,87 @@ def test_lm_batch_shifts_labels(corpus):
     b = pipeline.lm_batch(rows)
     assert np.array_equal(b["tokens"], rows[:, :-1])
     assert np.array_equal(b["labels"], rows[:, 1:])
+
+
+def test_read_batch_guard_blocks_concurrent_prefetch(corpus):
+    """Regression: make_global_batch used to call _read_batch directly and
+    race the prefetch producer thread on sampler state."""
+    path, _ = corpus
+    p = pipeline.DataPipeline(pipeline.PipelineConfig(
+        corpus=path, batch_size=10, sampling="systematic", prefetch=2))
+    it = iter(p)
+    next(it)
+    try:
+        with pytest.raises(RuntimeError, match="prefetch"):
+            p.read_batch()
+        with pytest.raises(RuntimeError, match="prefetch"):
+            pipeline.make_global_batch([p])
+        with pytest.raises(RuntimeError, match="prefetch"):
+            next(iter(p))   # second producer would race the first
+    finally:
+        p.close()
+    # once the producer is stopped, synchronous reads are allowed again
+    assert p.read_batch().shape == (10, 8)
+
+
+def test_make_global_batch_stacks_host_shards(corpus):
+    path, data = corpus
+    pipes = [pipeline.DataPipeline(pipeline.PipelineConfig(
+        corpus=path, batch_size=5, sampling="cyclic", host=h, num_hosts=2,
+        prefetch=0)) for h in range(2)]
+    rows = pipeline.make_global_batch(pipes)
+    lo1, _ = dataset.host_shard(100, 1, 2)
+    assert np.array_equal(rows[:5], data[:5])
+    assert np.array_equal(rows[5:], data[lo1:lo1 + 5])
+
+
+def test_device_stager_preserves_order_and_records_h2d(corpus):
+    path, data = corpus
+    p = pipeline.DataPipeline(pipeline.PipelineConfig(
+        corpus=path, batch_size=10, sampling="systematic", seed=11,
+        prefetch=2))
+    ref = pipeline.DataPipeline(pipeline.PipelineConfig(
+        corpus=path, batch_size=10, sampling="systematic", seed=11,
+        prefetch=0))
+    stager = pipeline.DeviceStager(iter(p), put=lambda x: x + 1,
+                                   convert=lambda r: r.astype(np.int64),
+                                   depth=2, stats=p.stats)
+    it = iter(stager)
+    try:
+        for _ in range(8):
+            staged = next(it)
+            assert np.array_equal(staged, ref._read_batch() + 1)
+    finally:
+        stager.close()
+        p.close()
+    assert p.stats.staged >= 8
+    assert p.stats.h2d_s > 0
+    assert p.stats.bytes_staged >= 8 * 10 * 8 * 8
+    assert p.stats.h2d_s_per_batch > 0
+
+
+def test_device_stager_is_single_use():
+    st = pipeline.DeviceStager(iter(range(100)), put=lambda x: x)
+    it = iter(st)
+    assert next(it) == 0
+    # concurrent second iteration and reuse-after-close both raise loudly
+    with pytest.raises(RuntimeError, match="single-use"):
+        next(iter(st))
+    st.close()
+    with pytest.raises(RuntimeError, match="single-use"):
+        next(iter(st))
+
+
+def test_device_stager_finite_source_and_error_propagation():
+    out = list(pipeline.DeviceStager(iter(range(5)), put=lambda x: x * 2))
+    assert out == [0, 2, 4, 6, 8]
+
+    def bad():
+        yield 1
+        raise ValueError("disk on fire")
+
+    stager = pipeline.DeviceStager(bad(), put=lambda x: x)
+    it = iter(stager)
+    assert next(it) == 1
+    with pytest.raises(ValueError, match="disk on fire"):
+        list(it)
