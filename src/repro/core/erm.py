@@ -70,6 +70,31 @@ class ERMProblem:
     def batch_grad_data(self, w: jax.Array, Xb: jax.Array, yb: jax.Array) -> jax.Array:
         return jax.grad(self.data_objective)(w, Xb, yb)
 
+    # ---- sparse (padded-ELL) mini-batch, same subproblem ----------------
+    # A CSR mini-batch arrives as (cols, vals): (b, kmax) int32/float32 with
+    # zero-valued padding (repro.data.sparse.SparseBatch).  The margin is a
+    # gather, the gradient a scatter-add — autodiff derives the scatter from
+    # the gather, so the five solver update rules need no sparse variants.
+
+    def ell_margins(self, w: jax.Array, cols: jax.Array,
+                    vals: jax.Array) -> jax.Array:
+        """z_i = x_i . w for padded-ELL rows (padding vals are 0)."""
+        return jnp.sum(vals * jnp.take(w, cols), axis=-1)
+
+    def ell_data_objective(self, w: jax.Array, cols: jax.Array,
+                           vals: jax.Array, yb: jax.Array) -> jax.Array:
+        per = _margin_losses(self.loss)(self.ell_margins(w, cols, vals), yb)
+        return jnp.mean(per)
+
+    def ell_batch_objective(self, w: jax.Array, cols: jax.Array,
+                            vals: jax.Array, yb: jax.Array) -> jax.Array:
+        return (self.ell_data_objective(w, cols, vals, yb)
+                + 0.5 * self.reg * jnp.dot(w, w))
+
+    def ell_batch_grad_data(self, w: jax.Array, cols: jax.Array,
+                            vals: jax.Array, yb: jax.Array) -> jax.Array:
+        return jax.grad(self.ell_data_objective)(w, cols, vals, yb)
+
     # ---- theory constants (Assumptions 1 & 2) ---------------------------
     def lipschitz(self, X: jax.Array) -> jax.Array:
         """Upper bound on L for the chosen loss: c * max_i ||x_i||^2 + C.

@@ -54,6 +54,7 @@ class SolverConfig(NamedTuple):
     ls_c: float = 1e-4            # Armijo constant
     ls_max_iter: int = 25
     use_fused: bool = False       # fused gather+grad Pallas kernels (CONSTANT only)
+    sparse: bool = False          # CSR corpus: padded-ELL batches, no densify
 
 
 class SolverState(NamedTuple):
@@ -90,18 +91,20 @@ def init_state(solver: str, w0: jax.Array, num_batches: int) -> SolverState:
 # step size selection
 # ---------------------------------------------------------------------------
 
-def _armijo(problem: ERMProblem, cfg: SolverConfig, w: jax.Array, v: jax.Array,
-            g: jax.Array, Xb: jax.Array, yb: jax.Array) -> jax.Array:
+def _armijo_obj(cfg: SolverConfig, obj: Callable[[jax.Array], jax.Array],
+                w: jax.Array, v: jax.Array, g: jax.Array) -> jax.Array:
     """Backtracking line search on the MINI-BATCH objective only (paper §4.1:
     full-dataset line search 'could hurt the convergence ... by taking huge
-    time'). Direction is -v; sufficient decrease wrt <g, v>."""
-    f0 = problem.batch_objective(w, Xb, yb)
+    time'). Direction is -v; sufficient decrease wrt <g, v>.  ``obj`` is the
+    batch objective as a function of w — dense and sparse (ELL) batches
+    share this core."""
+    f0 = obj(w)
     gv = jnp.dot(g, v)
 
     def cond(carry):
         alpha, it = carry
-        f_new = problem.batch_objective(w - alpha * v, Xb, yb)
-        return (f_new > f0 - cfg.ls_c * alpha * gv) & (it < cfg.ls_max_iter)
+        return (obj(w - alpha * v) > f0 - cfg.ls_c * alpha * gv) \
+            & (it < cfg.ls_max_iter)
 
     def body(carry):
         alpha, it = carry
@@ -117,11 +120,18 @@ def _armijo(problem: ERMProblem, cfg: SolverConfig, w: jax.Array, v: jax.Array,
     return jnp.where(gv > 0, alpha, alpha_safe)
 
 
-def _pick_step(problem, cfg, w, v, g, Xb, yb) -> jax.Array:
+def _armijo(problem: ERMProblem, cfg: SolverConfig, w: jax.Array, v: jax.Array,
+            g: jax.Array, Xb: jax.Array, yb: jax.Array) -> jax.Array:
+    """Dense-batch Armijo (thin wrapper over :func:`_armijo_obj`)."""
+    return _armijo_obj(cfg, lambda ww: problem.batch_objective(ww, Xb, yb),
+                       w, v, g)
+
+
+def _pick_step(cfg, obj, w, v, g) -> jax.Array:
     if cfg.step_mode == CONSTANT:
         return jnp.asarray(cfg.step_size, w.dtype)
     if cfg.step_mode == LINE_SEARCH:
-        return _armijo(problem, cfg, w, v, g, Xb, yb)
+        return _armijo_obj(cfg, obj, w, v, g)
     raise ValueError(f"unknown step mode {cfg.step_mode!r}")
 
 
@@ -189,7 +199,27 @@ def batch_step(problem: ERMProblem, cfg: SolverConfig, state: SolverState,
     gd_snap = (problem.batch_grad_data(state.snapshot, Xb, yb)
                if _needs_snapshot(cfg.solver) else None)
     v, g, new_state = _solver_direction(problem, cfg, state, j, gd, gd_snap)
-    alpha = _pick_step(problem, cfg, w, v, g, Xb, yb)
+    alpha = _pick_step(cfg, lambda ww: problem.batch_objective(ww, Xb, yb),
+                       w, v, g)
+    return new_state._replace(w=w - alpha * v)
+
+
+def sparse_batch_step(problem: ERMProblem, cfg: SolverConfig,
+                      state: SolverState, cols: jax.Array, vals: jax.Array,
+                      yb: jax.Array, j: jax.Array) -> SolverState:
+    """One solver update from a padded-ELL CSR batch — the corpus is never
+    densified.  (cols, vals): (b, kmax) per ``repro.data.sparse.SparseBatch``;
+    the update rules are shared with the dense path via
+    :func:`_solver_direction`, and line search backtracks on the sparse
+    batch objective."""
+    w = state.w
+    gd = problem.ell_batch_grad_data(w, cols, vals, yb)
+    gd_snap = (problem.ell_batch_grad_data(state.snapshot, cols, vals, yb)
+               if _needs_snapshot(cfg.solver) else None)
+    v, g, new_state = _solver_direction(problem, cfg, state, j, gd, gd_snap)
+    alpha = _pick_step(
+        cfg, lambda ww: problem.ell_batch_objective(ww, cols, vals, yb),
+        w, v, g)
     return new_state._replace(w=w - alpha * v)
 
 
@@ -285,6 +315,11 @@ def run(problem: ERMProblem, cfg: SolverConfig, scheme: str, X: jax.Array,
     if cfg.use_fused and cfg.step_mode != CONSTANT:
         raise ValueError("use_fused supports constant steps only: line search "
                          "evaluates trial objectives on the materialized batch")
+    if cfg.sparse:
+        raise ValueError(
+            "run() is the dense device-resident loop; CSR corpora go through "
+            "make_epoch_fn (host-driven padded-ELL chunks) or the "
+            "repro.kernels.sparse_erm fused kernels")
     l = X.shape[0]
     m = samplers.num_batches(l, batch_size)
     state = init_state(cfg.solver, w0, m)
@@ -305,7 +340,18 @@ def run(problem: ERMProblem, cfg: SolverConfig, scheme: str, X: jax.Array,
 # ---------------------------------------------------------------------------
 
 def make_step_fn(problem: ERMProblem, cfg: SolverConfig):
-    """jit'd (state, Xb, yb, j) -> state, for host loops that stream batches."""
+    """jit'd per-batch update for host loops that stream batches.
+
+    Dense: ``(state, Xb, yb, j) -> state``.  With ``cfg.sparse``:
+    ``(state, cols, vals, yb, j) -> state`` on padded-ELL CSR batches.
+    """
+    if cfg.sparse:
+        @jax.jit
+        def sparse_step(state: SolverState, cols: jax.Array, vals: jax.Array,
+                        yb: jax.Array, j: jax.Array) -> SolverState:
+            return sparse_batch_step(problem, cfg, state, cols, vals, yb, j)
+        return sparse_step
+
     @jax.jit
     def step(state: SolverState, Xb: jax.Array, yb: jax.Array,
              j: jax.Array) -> SolverState:
@@ -321,6 +367,11 @@ def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig):
     scanned in ONE device call — per-batch Python dispatch, H2D launch and
     jit-call overhead are amortized K-fold, which is what lets the paper's
     access-pattern signal show above interpreter noise in the benchmark.
+
+    With ``cfg.sparse`` the chunk is padded-ELL CSR and the signature becomes
+    ``(state, colsc, valsc, yc, js)`` with ``colsc: (K, b, kmax) int32``,
+    ``valsc: (K, b, kmax) float32`` — the corpus is never densified; compute
+    per batch is O(b * kmax), not O(b * n).
 
     ``state`` is donated: the caller must treat the passed-in state as
     consumed and rebind the return value.  Identical (problem, cfg) pairs
@@ -338,6 +389,20 @@ def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig):
     # unrolling it only bloats compile time
     unroll = 8 if cfg.step_mode == CONSTANT else 1
 
+    if cfg.sparse:
+        @partial(jax.jit, donate_argnums=(0,))
+        def sparse_epoch_chunk(state: SolverState, colsc: jax.Array,
+                               valsc: jax.Array, yc: jax.Array,
+                               js: jax.Array) -> SolverState:
+            def body(st, inp):
+                cols, vals, yb, j = inp
+                return sparse_batch_step(problem, cfg, st, cols, vals,
+                                         yb, j), None
+            out, _ = jax.lax.scan(body, state, (colsc, valsc, yc, js),
+                                  unroll=unroll)
+            return out
+        return sparse_epoch_chunk
+
     @partial(jax.jit, donate_argnums=(0,))
     def epoch_chunk(state: SolverState, Xc: jax.Array, yc: jax.Array,
                     js: jax.Array) -> SolverState:
@@ -347,6 +412,28 @@ def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig):
         out, _ = jax.lax.scan(body, state, (Xc, yc, js), unroll=unroll)
         return out
     return epoch_chunk
+
+
+def make_resident_epoch_fn(problem: ERMProblem, cfg: SolverConfig,
+                           scheme: str, batch_size: int):
+    """Fused host mode: ``(state, X, y, key) -> state`` with the WHOLE corpus
+    resident on device (``PipelineConfig.resident``).
+
+    Batch selection happens in-graph — ``batch_slice_starts`` drives one
+    ``dynamic_slice`` per CS/SS batch, ``epoch_indices`` one gather per RS
+    batch — so after the one-time staging there is no per-chunk H2D at all;
+    the driver credits the avoided restaging via
+    ``AccessStats.record_h2d_saved``.  Snapshot solvers refresh their full
+    gradient in the same device call.
+    """
+    if cfg.sparse:
+        raise ValueError(
+            "resident mode stages a dense (l, n) corpus; CSR corpora keep "
+            "the host-driven sparse epoch engine")
+    if cfg.use_fused and cfg.step_mode != CONSTANT:
+        raise ValueError("use_fused supports constant steps only: line search "
+                         "evaluates trial objectives on the materialized batch")
+    return partial(_run_one_epoch, problem, cfg, scheme, batch_size)
 
 
 def streaming_full_grad(problem: ERMProblem, w, batch_iter, *, data_term_only=False):

@@ -19,17 +19,32 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class CorpusMeta:
-    kind: str              # "tokens" | "rows"
+    kind: str              # "tokens" | "rows" | "sparse_rows"
     rows: int              # sequences (LM) or data points (ERM)
     row_dim: int           # tokens per sequence / features per point (+1 label)
     dtype: str
+    # sparse (CSR) extension.  Dense metadata stays byte-compatible BOTH
+    # ways: to_json omits the extension keys for fmt="dense" (so pre-
+    # extension readers sharing a corpus cache keep working), and
+    # from_json drops unknown keys (so future extensions don't break us).
+    fmt: str = "dense"     # "dense" | "csr"
+    nnz: int = 0           # stored nonzeros (CSR only)
+    max_row_nnz: int = 0   # densest row (CSR only; sizes kernel DMA windows)
+
+    _EXTENSION_KEYS = ("fmt", "nnz", "max_row_nnz")
 
     def to_json(self) -> str:
-        return json.dumps(dataclasses.asdict(self))
+        d = dataclasses.asdict(self)
+        if self.fmt == "dense":
+            for k in self._EXTENSION_KEYS:
+                del d[k]
+        return json.dumps(d)
 
     @staticmethod
     def from_json(s: str) -> "CorpusMeta":
-        return CorpusMeta(**json.loads(s))
+        known = {f.name for f in dataclasses.fields(CorpusMeta)}
+        return CorpusMeta(**{k: v for k, v in json.loads(s).items()
+                             if k in known})
 
 
 def _meta_path(path: Path) -> Path:

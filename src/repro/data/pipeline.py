@@ -45,16 +45,26 @@ class PipelineConfig:
     num_hosts: int = 1
     prefetch: int = 2
     drop_remainder: bool = True
+    resident: bool = False           # stage the whole shard on device ONCE
+    # (fused host mode: the epoch runner slices batches in-graph from the
+    # resident copy and skips per-chunk H2D entirely; consumed by the
+    # benchmark/train drivers via read_all(), not by the batch iterator)
 
 
 @dataclasses.dataclass
 class AccessStats:
+    """Access/H2D accounting.  ``bytes_read`` counts bytes ACTUALLY touched
+    by each read — the dense slice/gather size, or for CSR pipelines the
+    nnz-proportional indices+values+indptr+label bytes — never an assumed
+    ``b * row_dim`` footprint, so MB/s columns are comparable across dense
+    and sparse runs."""
     batches: int = 0
     access_s: float = 0.0
     bytes_read: int = 0
     staged: int = 0          # batches copied host->device
     h2d_s: float = 0.0       # time spent in host->device staging
     bytes_staged: int = 0
+    h2d_saved_s: float = 0.0  # staging time AVOIDED by resident mode
 
     def record(self, dt: float, nbytes: int):
         self.batches += 1
@@ -66,6 +76,11 @@ class AccessStats:
         self.h2d_s += dt
         self.bytes_staged += nbytes
 
+    def record_h2d_saved(self, dt: float):
+        """Resident mode: credit the per-epoch restaging cost that the
+        one-time device copy made unnecessary."""
+        self.h2d_saved_s += dt
+
     @property
     def s_per_batch(self) -> float:
         return self.access_s / max(self.batches, 1)
@@ -74,22 +89,33 @@ class AccessStats:
     def h2d_s_per_batch(self) -> float:
         return self.h2d_s / max(self.staged, 1)
 
+    @property
+    def read_mb(self) -> float:
+        return self.bytes_read / 1e6
 
-class DataPipeline:
-    """Iterator over host-local mini-batches of corpus rows."""
+    @property
+    def read_mb_per_s(self) -> float:
+        return self.bytes_read / 1e6 / max(self.access_s, 1e-12)
 
-    def __init__(self, cfg: PipelineConfig, start_step: int = 0):
-        self.cfg = cfg
-        self.mm, self.meta = open_corpus(cfg.corpus)
-        lo, hi = host_shard(self.meta.rows, cfg.host, cfg.num_hosts)
-        self.lo, self.hi = lo, hi
-        self.sampler = samplers.restore(
-            cfg.sampling, cfg.seed + cfg.host, start_step,
-            hi - lo, cfg.batch_size)
-        self.stats = AccessStats()
+
+class PrefetchPipeline:
+    """Prefetch machinery shared by the dense and CSR pipelines.
+
+    Subclasses own the sampler and implement :meth:`_read_batch`; this base
+    provides the guarded synchronous read, the background producer thread,
+    and teardown.  The single-producer invariant lives here once: a second
+    reader racing the producer on sampler state would silently corrupt the
+    deterministic schedule.
+    """
+
+    def __init__(self, prefetch: int):
+        self._prefetch = prefetch
         self._q: Optional[queue.Queue] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+
+    def _read_batch(self):
+        raise NotImplementedError
 
     # ---- state (for checkpointing) ------------------------------------
     def state_dict(self) -> Dict:
@@ -99,7 +125,16 @@ class DataPipeline:
                 "batch_size": self.cfg.batch_size}
 
     # ---- synchronous read ----------------------------------------------
-    def read_batch(self) -> np.ndarray:
+    def _check_not_resident(self):
+        # resident mode and batch streaming are mutually exclusive: the
+        # flag promises "staged once, sliced in-graph", so silently
+        # streaming batches anyway would misreport what ran
+        if getattr(getattr(self, "cfg", None), "resident", False):
+            raise RuntimeError(
+                "resident pipeline: stage the shard once via read_all(); "
+                "batch iteration is disabled")
+
+    def read_batch(self):
         """Public synchronous read.
 
         Refuses to run while the prefetch producer thread owns the sampler:
@@ -107,30 +142,13 @@ class DataPipeline:
         silently skew the schedule.  Consume via ``iter(self)`` instead, or
         build the pipeline with ``prefetch=0``.
         """
+        self._check_not_resident()
         if self._thread is not None and self._thread.is_alive():
             raise RuntimeError(
                 "prefetch producer is active; reading synchronously would "
                 "race on sampler state — iterate the pipeline or use "
                 "prefetch=0")
         return self._read_batch()
-
-    def _read_batch(self) -> np.ndarray:
-        t0 = time.perf_counter()
-        if self.sampler.scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
-            start, self.sampler = samplers.next_block_start(self.sampler)
-            b = self.cfg.batch_size
-            if start + b <= self.hi - self.lo:
-                rows = np.asarray(self.mm[self.lo + start:self.lo + start + b])
-            else:  # wrap-around at shard end: two contiguous reads
-                first = self.hi - self.lo - start
-                rows = np.concatenate([
-                    np.asarray(self.mm[self.lo + start:self.hi]),
-                    np.asarray(self.mm[self.lo:self.lo + b - first])])
-        else:
-            idx, self.sampler = samplers.next_batch(self.sampler)
-            rows = np.asarray(self.mm[self.lo + idx])   # scattered gather
-        self.stats.record(time.perf_counter() - t0, rows.nbytes)
-        return rows
 
     # ---- prefetching iterator -------------------------------------------
     def _producer(self):
@@ -143,8 +161,9 @@ class DataPipeline:
                 except queue.Full:
                     continue
 
-    def __iter__(self) -> Iterator[np.ndarray]:
-        if self.cfg.prefetch <= 0:
+    def __iter__(self) -> Iterator:
+        self._check_not_resident()
+        if self._prefetch <= 0:
             while True:
                 yield self._read_batch()
         if self._thread is not None and self._thread.is_alive():
@@ -153,7 +172,7 @@ class DataPipeline:
             raise RuntimeError(
                 "prefetch producer already running; close() this pipeline "
                 "before iterating it again")
-        self._q = queue.Queue(maxsize=self.cfg.prefetch)
+        self._q = queue.Queue(maxsize=self._prefetch)
         self._stop.clear()
         self._thread = threading.Thread(target=self._producer, daemon=True)
         self._thread.start()
@@ -174,6 +193,64 @@ class DataPipeline:
         if self._thread is not None:
             self._thread.join(timeout=2.0)
             self._thread = None
+
+
+class DataPipeline(PrefetchPipeline):
+    """Iterator over host-local mini-batches of corpus rows."""
+
+    def __init__(self, cfg: PipelineConfig, start_step: int = 0):
+        super().__init__(cfg.prefetch)
+        self.cfg = cfg
+        self.mm, self.meta = open_corpus(cfg.corpus)
+        lo, hi = host_shard(self.meta.rows, cfg.host, cfg.num_hosts)
+        self.lo, self.hi = lo, hi
+        self.sampler = samplers.restore(
+            cfg.sampling, cfg.seed + cfg.host, start_step,
+            hi - lo, cfg.batch_size)
+        self.stats = AccessStats()
+
+    def _read_batch(self) -> np.ndarray:
+        t0 = time.perf_counter()
+        if self.sampler.scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
+            start, self.sampler = samplers.next_block_start(self.sampler)
+            b = self.cfg.batch_size
+            if start + b <= self.hi - self.lo:
+                # np.array, not asarray: a memmap slice is a lazy VIEW, and
+                # the timed region must actually fault the pages in or the
+                # recorded access time is just pointer arithmetic (the RS
+                # branch's fancy indexing always copies — same basis)
+                rows = np.array(self.mm[self.lo + start:self.lo + start + b])
+            else:  # wrap-around at shard end: two contiguous reads
+                first = self.hi - self.lo - start
+                rows = np.concatenate([
+                    np.asarray(self.mm[self.lo + start:self.hi]),
+                    np.asarray(self.mm[self.lo:self.lo + b - first])])
+        else:
+            idx, self.sampler = samplers.next_batch(self.sampler)
+            rows = np.asarray(self.mm[self.lo + idx])   # scattered gather
+        self.stats.record(time.perf_counter() - t0, rows.nbytes)
+        return rows
+
+    # ---- resident (fused host) mode -------------------------------------
+    def read_all(self) -> np.ndarray:
+        """ONE contiguous read of the whole host shard.
+
+        Resident mode (``PipelineConfig.resident``): the caller stages this
+        on device once and drives the epoch from ``batch_slice_starts`` /
+        ``epoch_indices`` in-graph, skipping per-chunk H2D; per-epoch
+        staging time avoided is credited via
+        :meth:`AccessStats.record_h2d_saved`.
+        """
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError(
+                "prefetch producer is active; resident staging and batch "
+                "streaming are mutually exclusive on one pipeline")
+        t0 = time.perf_counter()
+        # forced copy: a memmap view would defer the actual read to the
+        # device_put that follows, silently booking disk time as H2D
+        rows = np.array(self.mm[self.lo:self.hi])
+        self.stats.record(time.perf_counter() - t0, rows.nbytes)
+        return rows
 
 
 def lm_batch(rows: np.ndarray) -> Dict[str, np.ndarray]:

@@ -3,6 +3,9 @@
   sampled_gather  the paper's contribution at the HBM->VMEM tier
   fused_erm       sampled gather FUSED with the ERM gradient — the epoch
                   engine's hot path; the mini-batch never lands in HBM
+  sparse_erm      the CSR counterpart: per-row-segment DMA (RS) vs one
+                  contiguous indptr-range DMA (CS/SS), nnz-proportional
+                  bytes, rows densified only transiently in VMEM
   flash_attention online-softmax attention for the GQA archs
   ssd             Mamba2 state-space-dual chunked scan
   rglru_scan      RecurrentGemma RG-LRU linear recurrence
