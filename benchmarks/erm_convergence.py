@@ -1,23 +1,22 @@
 """Paper Figs 1-4: objective minus optimum vs TRAINING TIME per scheme.
 
-Device-resident variant (fast, deterministic): the solver epoch is jit'd and
-batch selection happens in-graph (gather for RS, dynamic_slice for CS/SS) —
-the access-pattern effect shows up as wall-clock difference per epoch.
-Writes artifacts/bench/convergence_<solver>.csv with columns
+Device-resident variant (fast, deterministic) through the unified API: one
+``ExperimentSpec`` per scheme, executed ONE EPOCH AT A TIME via the resume
+machinery (``execute(plan, resume=prev, epochs=1)``) so each point on the
+curve carries its own wall-clock segment while the batch schedule stays
+exactly what a single uninterrupted run would use.  Writes
+artifacts/bench/convergence_<solver>.csv with columns
 scheme,epoch,time_s,gap.
 """
 from __future__ import annotations
 
-import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (ERMProblem, SolverConfig, samplers,
-                        synth_classification)
-from repro.core.solvers import _run_one_epoch, init_state
+from repro.api import DataSource, ExperimentSpec, execute, plan
+from repro.core import ERMProblem, samplers, synth_classification
 
 
 def curves(solver="saga", l=65536, n=64, batch=512, epochs=12, reg=1e-3,
@@ -26,7 +25,6 @@ def curves(solver="saga", l=65536, n=64, batch=512, epochs=12, reg=1e-3,
     X, y, _ = synth_classification(key, l, n, separation=2.0)
     prob = ERMProblem(loss="logistic", reg=reg)
     L = float(prob.lipschitz(X))
-    cfg = SolverConfig(solver=solver, step_mode="constant", step_size=1.0 / L)
 
     # reference optimum
     w = jnp.zeros(n)
@@ -34,24 +32,17 @@ def curves(solver="saga", l=65536, n=64, batch=512, epochs=12, reg=1e-3,
         w = w - (1.0 / L) * prob.full_grad(w, X, y)
     pstar = float(prob.objective(w, X, y))
 
-    obj = jax.jit(lambda w: prob.objective(w, X, y))
-    m = samplers.num_batches(l, batch)
     rows = []
     for scheme in samplers.SCHEMES:
-        state = init_state(solver, jnp.zeros(n), m)
-        key2 = jax.random.PRNGKey(1)
-        # compile outside timing
-        jax.block_until_ready(_run_one_epoch(prob, cfg, scheme, batch,
-                                             state, X, y, key2).w)
-        state = init_state(solver, jnp.zeros(n), m)
-        t = 0.0
+        p = plan(ExperimentSpec(
+            data=DataSource.arrays(X, y), loss="logistic", reg=reg,
+            solver=solver, scheme=scheme, step_size=1.0 / L,
+            batch_size=batch, epochs=epochs, seed=1))
+        res, t = None, 0.0
         for e in range(epochs):
-            key2, sub = jax.random.split(key2)
-            t0 = time.perf_counter()
-            state = _run_one_epoch(prob, cfg, scheme, batch, state, X, y, sub)
-            jax.block_until_ready(state.w)
-            t += time.perf_counter() - t0
-            rows.append((scheme, e, t, float(obj(state.w)) - pstar))
+            res = execute(p, resume=res, epochs=1)
+            t += res.train_s
+            rows.append((scheme, e, t, res.objective - pstar))
     out_dir.mkdir(parents=True, exist_ok=True)
     path = out_dir / f"convergence_{solver}.csv"
     with open(path, "w") as f:

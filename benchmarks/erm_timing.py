@@ -1,33 +1,30 @@
 """Paper Tables 2-4: training time + final objective for 5 solvers x
 2 step rules x 3 sampling schemes on a memmapped dataset.
 
-The paper's regime exactly: data streams from storage each epoch (mini-batch
-reads dominated by access pattern), solver update jit'd on device.  Since the
-fused epoch engine, the hot path is three overlapped tiers:
+Every cell is one ``ExperimentSpec`` lowered by ``repro.api.plan`` and run
+by ``execute`` — the benchmark owns NO execution wiring anymore.  The
+planner picks the backend per cell:
 
-  disk -> host      DataPipeline prefetch thread (access time)
-  host -> device    DeviceStager double buffering   (H2D time)
-  device            make_epoch_fn: ONE jit call lax.scans a whole chunk of
-                    K mini-batches with donated solver state (compute time)
+* default — ``placement='streamed'`` forces the paper's regime (data
+  streams from storage each epoch): DataPipeline prefetch (access time),
+  DeviceStager double buffering (H2D time), and the chunked epoch engine
+  scanning K staged batches per device call (compute time).
+* ``--sparse`` — CSR corpus sweep over ``--densities`` x schemes through
+  the ``sparse-csr`` backend; emits the ``BENCH_sparse.json`` schema with
+  nnz-proportional access-MB columns.  This is the paper's largest-win
+  regime (news20/rcv1-like data).
+* ``--resident`` — fused host mode: the corpus is staged on device ONCE
+  and epochs run fully in-graph; the avoided per-epoch restaging is
+  reported as ``h2d_saved_s_per_epoch``.  On TPU the planner also selects
+  the fused Pallas kernels for constant-step cells automatically.
 
-so per-batch Python dispatch no longer drowns the access-pattern signal the
-paper is about.  The access/H2D/compute breakdown per scheme is printed and
-written to ``BENCH_erm.json`` so the perf trajectory is tracked across PRs.
+The access/H2D/compute breakdown per scheme comes straight from
+``RunResult.breakdown()`` and is printed and written to ``BENCH_erm.json``
+so the perf trajectory is tracked across PRs.
 
 Output CSV (stdout): name,us_per_call,derived where name =
 erm_<solver>_<stepmode>_<scheme>, us_per_call = training time per epoch
 (us), derived = final objective + breakdown + speedup vs RS.
-
-Two extra regimes (see benchmarks/README.md):
-
-* ``--sparse`` — CSR corpus sweep over ``--densities`` x schemes via
-  ``SparsePipeline`` + the sparse chunked epoch engine
-  (``SolverConfig(sparse=True)``); emits the ``BENCH_sparse.json`` schema
-  with nnz-proportional access-MB columns.  This is the paper's
-  largest-win regime (news20/rcv1-like data).
-* ``--resident`` — fused host mode: stage the dense corpus on device ONCE
-  and run epochs fully in-graph, reporting the avoided per-epoch
-  restaging as ``h2d_saved_s_per_epoch``.
 
 Default scale is a laptop-class reduction (the paper used 11M-point HIGGS on
 a MacBook; CI-friendly defaults reproduce the *ratios*, and --rows/--epochs
@@ -37,92 +34,17 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+from repro.api import (CONSTANT, DataSource, ExperimentSpec, LINE_SEARCH,
+                       RESIDENT, SOLVERS, STREAMED, execute, plan)
 from repro.core import samplers
-from repro.core.erm import ERMProblem
-from repro.core.solvers import (CONSTANT, LINE_SEARCH, SOLVERS, SolverConfig,
-                                epoch_begin, init_state, make_epoch_fn,
-                                make_resident_epoch_fn, streaming_full_grad)
-from repro.data import dataset, pipeline, sparse
+from repro.data import dataset, sparse
 
 DEFAULT_JSON = Path(__file__).resolve().parent / "BENCH_erm.json"
 DEFAULT_SPARSE_JSON = Path(__file__).resolve().parent / "BENCH_sparse.json"
-_CHUNK_BYTE_BUDGET = 64 << 20   # per staged chunk, when --chunk is unset
-
-
-def _put_blocking(host):
-    return jax.block_until_ready(tuple(jax.device_put(a) for a in host))
-
-
-def _warmup_epoch_fn(epoch_fn, solver, n, m, K, zeros):
-    """Compile every chunk shape outside the timed region.  ``zeros(k)``
-    builds the zero-filled chunk arrays for a k-batch chunk."""
-    for k in sorted({K, m % K} - {0}):
-        dummy = init_state(solver, jnp.zeros(n, jnp.float32), m)
-        jax.block_until_ready(epoch_fn(
-            dummy, *zeros(k), jnp.zeros((k,), jnp.int32)))
-
-
-def _drive_chunked(pipe, epoch_fn, state, *, m, K, epochs, alloc, fill,
-                   snapshot_begin=None):
-    """The shared streaming engine under both the dense and sparse cells:
-    group the pipeline's batch stream into <=K-batch chunks (never crossing
-    an epoch boundary — snapshot solvers refresh state between epochs),
-    double-buffer them host->device (DeviceStager), and scan each chunk in
-    one device call.
-
-    ``alloc(k)`` builds the contiguous host staging buffers for a k-batch
-    chunk (batches are written straight in — one copy, not
-    stack-then-slice); ``fill(bufs, i, batch)`` writes batch i;
-    ``snapshot_begin(state)`` is the per-epoch memory refresh (SVRG/SAAG-II)
-    or None.  Returns (state, compute_s, train_s).
-    """
-    def host_chunks():
-        it = iter(pipe)
-        step, total = 0, m * epochs
-        while step < total:
-            j0 = step % m
-            k = min(K, m - j0)
-            bufs = alloc(k)
-            for i in range(k):
-                fill(bufs, i, next(it))
-            yield bufs + (j0,)
-            step += k
-
-    def convert(arg):
-        *bufs, j0 = arg
-        js = (np.arange(j0, j0 + bufs[0].shape[0]) % m).astype(np.int32)
-        return tuple(bufs) + (js,)
-
-    stager = pipeline.DeviceStager(host_chunks(), put=_put_blocking,
-                                   convert=convert, depth=2,
-                                   stats=pipe.stats)
-    chunks_iter = iter(stager)
-    compute_s = 0.0
-    t0 = time.perf_counter()
-    try:
-        for _ in range(epochs):
-            if snapshot_begin is not None:
-                state = snapshot_begin(state)
-            done = 0
-            while done < m:
-                args = next(chunks_iter)
-                tc = time.perf_counter()
-                state = epoch_fn(state, *args)
-                jax.block_until_ready(state.w)
-                compute_s += time.perf_counter() - tc
-                done += args[0].shape[0]
-        train_s = time.perf_counter() - t0
-    finally:
-        stager.close()
-        pipe.close()
-    return state, compute_s, train_s
 
 
 def _annotate_vs_rs(r, times, access):
@@ -143,215 +65,49 @@ def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
             batch: int, epochs: int, reg: float = 1e-4,
             chunk: int | None = None, prefetch: int = 2,
             resident: bool = False):
-    """Train and time one (solver, step rule, scheme) cell.
-
-    Returns a result dict with the per-epoch wall time and its
-    access/H2D/compute decomposition.  ``resident`` is the fused host mode:
-    the corpus is staged on device ONCE and the epoch runs entirely
-    in-graph (``make_resident_epoch_fn``), skipping per-chunk H2D — the
-    avoided restaging is reported as ``h2d_saved_s_per_epoch``.
-    """
-    mm, meta = dataset.open_corpus(corpus)
-    l, n = meta.rows, meta.row_dim - 1
-    prob = ERMProblem(loss="logistic", reg=reg)
-    # constant step = 1/L (paper §4.1); LS starts at 1.0
-    sample = jnp.asarray(mm[:4096, :n])
-    L = float(0.25 * jnp.max(jnp.sum(sample * sample, axis=1)) + reg)
-    step_size = (1.0 / L) if step_mode == CONSTANT else 1.0
-    cfg = SolverConfig(solver=solver, step_mode=step_mode,
-                       step_size=step_size)
-    m = samplers.num_batches(l, batch)
-    if resident:
-        return _run_one_resident(corpus, prob, cfg, scheme, batch=batch,
-                                 epochs=epochs, m=m, n=n)
-    if chunk is None:
-        # default: whole epoch per device call, but bounded so staging
-        # buffers stay modest at --rows scale-up (depth-2 double buffering
-        # keeps ~3 chunks in flight); explicit --chunk overrides
-        chunk = max(1, _CHUNK_BYTE_BUDGET // (batch * (n + 1) * 4))
-    K = max(1, min(chunk, m))             # batches per device call
-    state = init_state(solver, jnp.zeros(n, jnp.float32), m)
-    epoch_fn = make_epoch_fn(prob, cfg)
-
-    pipe = pipeline.DataPipeline(pipeline.PipelineConfig(
-        corpus=corpus, batch_size=batch, sampling=scheme, prefetch=prefetch))
-
-    def full_grad_stream(w, data_term_only=False):
-        def batches():
-            for lo in range(0, l, 8192):
-                rows = np.asarray(mm[lo:lo + 8192])
-                yield rows[:, :n], rows[:, n]
-        return streaming_full_grad(prob, w, batches(),
-                                   data_term_only=data_term_only)
-
-    def alloc(k):
-        return (np.empty((k, batch, n), np.float32),
-                np.empty((k, batch), np.float32))
-
-    def fill(bufs, i, rows):
-        bufs[0][i] = rows[:, :n]
-        bufs[1][i] = rows[:, n]
-
-    _warmup_epoch_fn(epoch_fn, solver, n, m, K,
-                     lambda k: (jnp.zeros((k, batch, n), jnp.float32),
-                                jnp.zeros((k, batch), jnp.float32)))
-    snapshot_begin = None
-    if solver in ("svrg", "saag2"):
-        # the snapshot full-grad stream compiles too — keep it out of epoch 1
-        jax.block_until_ready(full_grad_stream(
-            jnp.zeros(n, jnp.float32), data_term_only=(solver == "saag2")))
-        snapshot_begin = lambda st: epoch_begin(
-            prob, cfg, st, lambda w: full_grad_stream(
-                w, data_term_only=(solver == "saag2")))
-
-    state, compute_s, train_s = _drive_chunked(
-        pipe, epoch_fn, state, m=m, K=K, epochs=epochs, alloc=alloc,
-        fill=fill, snapshot_begin=snapshot_begin)
-
-    # final objective over the full dataset (streamed)
-    obj = 0.0
-    for lo in range(0, l, 8192):
-        rows = np.asarray(mm[lo:lo + 8192])
-        obj += float(prob.data_objective(state.w, jnp.asarray(rows[:, :n]),
-                                         jnp.asarray(rows[:, n]))) * rows.shape[0]
-    obj = obj / l + 0.5 * reg * float(jnp.dot(state.w, state.w))
-
-    st = pipe.stats
-    return {
-        "name": f"erm_{solver}_{step_mode}_{scheme}",
+    """Train and time one (solver, step rule, scheme) cell through
+    plan()/execute(); returns the BENCH_erm result-dict schema."""
+    spec = ExperimentSpec(
+        data=DataSource.corpus(corpus), loss="logistic", reg=reg,
+        solver=solver, scheme=scheme, step_mode=step_mode,
+        batch_size=batch, epochs=epochs, chunk=chunk, prefetch=prefetch,
+        placement=RESIDENT if resident else STREAMED,
+        record_objective=False)
+    p = plan(spec)
+    res = execute(p)
+    r = {
+        "name": f"erm_{solver}_{step_mode}_{scheme}"
+                + ("_resident" if resident else ""),
         "solver": solver, "step_mode": step_mode, "scheme": scheme,
-        "epochs": epochs, "chunk": K,
-        "epoch_s": train_s / epochs,
-        "access_s_per_epoch": st.s_per_batch * m,       # producer thread
-        "h2d_s_per_epoch": st.h2d_s / max(st.staged, 1) * (-(-m // K)),
-        "compute_s_per_epoch": compute_s / epochs,      # device (blocked)
-        # actual bytes touched (dense slice/gather), not an assumed b*n —
-        # comparable with the sparse (nnz-proportional) runs
-        "access_mb_per_epoch": st.read_mb / max(st.batches, 1) * m,
-        "access_mb_per_s": st.read_mb_per_s,
-        "objective": obj,
+        "epochs": epochs, "chunk": p.chunk, "backend": p.backend,
+        **res.breakdown(),
     }
-
-
-def _run_one_resident(corpus: Path, prob: ERMProblem, cfg: SolverConfig,
-                      scheme: str, *, batch: int, epochs: int, m: int,
-                      n: int):
-    """Fused host mode: ONE shard read, ONE device staging, in-graph epochs."""
-    pipe = pipeline.DataPipeline(pipeline.PipelineConfig(
-        corpus=corpus, batch_size=batch, sampling=scheme, prefetch=0,
-        resident=True))
-    rows = pipe.read_all()
-    # both contiguity copies happen BEFORE the timer: device_put of a
-    # strided view would hide a host-side memcpy inside the H2D number
-    # (and inflate every h2d_saved credit derived from it)
-    Xh = np.ascontiguousarray(rows[:, :n])
-    yh = np.ascontiguousarray(rows[:, n])
-    t0 = time.perf_counter()
-    X, y = jax.block_until_ready(
-        (jax.device_put(Xh), jax.device_put(yh)))
-    h2d_dt = time.perf_counter() - t0
-    pipe.stats.record_h2d(h2d_dt, Xh.nbytes + yh.nbytes)
-
-    epoch_fn = make_resident_epoch_fn(prob, cfg, scheme, batch)
-    state = init_state(cfg.solver, jnp.zeros(n, jnp.float32), m)
-    # warmup: compile (and the snapshot full-grad it embeds) untimed
-    dummy = init_state(cfg.solver, jnp.zeros(n, jnp.float32), m)
-    jax.block_until_ready(epoch_fn(dummy, X, y, jax.random.PRNGKey(1)).w)
-
-    key = jax.random.PRNGKey(0)
-    compute_s = 0.0
-    t0 = time.perf_counter()
-    for e in range(epochs):
-        key, sub = jax.random.split(key)
-        tc = time.perf_counter()
-        state = epoch_fn(state, X, y, sub)
-        jax.block_until_ready(state.w)
-        compute_s += time.perf_counter() - tc
-        if e > 0:   # every epoch after the first would have restaged
-            pipe.stats.record_h2d_saved(h2d_dt)
-    train_s = time.perf_counter() - t0
-
-    obj = float(prob.objective(state.w, X, y))
-    st = pipe.stats
-    return {
-        "name": f"erm_{cfg.solver}_{cfg.step_mode}_{scheme}_resident",
-        "solver": cfg.solver, "step_mode": cfg.step_mode, "scheme": scheme,
-        "epochs": epochs, "chunk": m, "resident": True,
-        "epoch_s": train_s / epochs,
-        "access_s_per_epoch": st.access_s / epochs,     # one-time, amortized
-        "h2d_s_per_epoch": st.h2d_s / epochs,           # one-time, amortized
-        "h2d_saved_s_per_epoch": st.h2d_saved_s / epochs,
-        "compute_s_per_epoch": compute_s / epochs,
-        "access_mb_per_epoch": st.read_mb / epochs,
-        "access_mb_per_s": st.read_mb_per_s,
-        "objective": obj,
-    }
+    if resident:
+        r["resident"] = True
+    return r
 
 
 def run_one_sparse(corpus: Path, solver: str, step_mode: str, scheme: str, *,
                    batch: int, epochs: int, reg: float = 1e-4,
                    chunk: int | None = None, prefetch: int = 2):
-    """Sparse (CSR) counterpart of :func:`run_one`: SparsePipeline streams
-    padded-ELL batches, the sparse chunked epoch engine consumes them, and
-    access bytes are nnz-proportional — the regime where the paper's
-    RS-vs-CS/SS gap is widest."""
-    csr = sparse.open_csr_corpus(corpus)
-    l, n, kmax = csr.rows, csr.features, csr.kmax
-    prob = ERMProblem(loss="logistic", reg=reg)
-    L = sparse.csr_lipschitz(prob, csr)
-    step_size = (1.0 / L) if step_mode == CONSTANT else 1.0
-    cfg = SolverConfig(solver=solver, step_mode=step_mode,
-                       step_size=step_size, sparse=True)
-    m = samplers.num_batches(l, batch)
-    if chunk is None:
-        chunk = max(1, _CHUNK_BYTE_BUDGET // (batch * (kmax * 8 + 4)))
-    K = max(1, min(chunk, m))
-    state = init_state(solver, jnp.zeros(n, jnp.float32), m)
-    epoch_fn = make_epoch_fn(prob, cfg)
-
-    pipe = sparse.SparsePipeline(pipeline.PipelineConfig(
-        corpus=corpus, batch_size=batch, sampling=scheme, prefetch=prefetch))
-
-    def alloc(k):
-        return (np.empty((k, batch, kmax), np.int32),
-                np.empty((k, batch, kmax), np.float32),
-                np.empty((k, batch), np.float32))
-
-    def fill(bufs, i, sb):
-        bufs[0][i], bufs[1][i], bufs[2][i] = sb.cols, sb.vals, sb.y
-
-    _warmup_epoch_fn(epoch_fn, solver, n, m, K,
-                     lambda k: (jnp.zeros((k, batch, kmax), jnp.int32),
-                                jnp.zeros((k, batch, kmax), jnp.float32),
-                                jnp.zeros((k, batch), jnp.float32)))
-
-    snapshot_begin = None
-    if solver in ("svrg", "saag2"):
-        # scipy-backed (numpy fallback) streamed pass — the CPU path for
-        # SVRG/SAAG-II snapshot refreshes on CSR
-        snapshot_begin = lambda st: epoch_begin(
-            prob, cfg, st, lambda w: jnp.asarray(sparse.csr_full_grad(
-                prob, csr, np.asarray(w),
-                data_term_only=(solver == "saag2"))))
-
-    state, compute_s, train_s = _drive_chunked(
-        pipe, epoch_fn, state, m=m, K=K, epochs=epochs, alloc=alloc,
-        fill=fill, snapshot_begin=snapshot_begin)
-
-    obj = sparse.csr_objective(prob, csr, np.asarray(state.w))
-    st = pipe.stats
+    """Sparse (CSR) counterpart of :func:`run_one`: the planner routes the
+    cell through the ``sparse-csr`` backend (SparsePipeline streaming
+    padded-ELL batches into the sparse chunked epoch engine) and access
+    bytes are nnz-proportional — the regime where the paper's RS-vs-CS/SS
+    gap is widest."""
+    spec = ExperimentSpec(
+        data=DataSource.corpus(corpus), loss="logistic", reg=reg,
+        solver=solver, scheme=scheme, step_mode=step_mode,
+        batch_size=batch, epochs=epochs, chunk=chunk, prefetch=prefetch,
+        record_objective=False)
+    p = plan(spec)
+    res = execute(p)
     return {
         "name": f"erm_sparse_{solver}_{step_mode}_{scheme}",
         "solver": solver, "step_mode": step_mode, "scheme": scheme,
-        "epochs": epochs, "chunk": K, "sparse": True,
-        "density": csr.density, "kmax": kmax, "nnz": csr.nnz,
-        "epoch_s": train_s / epochs,
-        "access_s_per_epoch": st.s_per_batch * m,
-        "h2d_s_per_epoch": st.h2d_s / max(st.staged, 1) * (-(-m // K)),
-        "compute_s_per_epoch": compute_s / epochs,
-        "access_mb_per_epoch": st.read_mb / max(st.batches, 1) * m,
-        "access_mb_per_s": st.read_mb_per_s,
-        "objective": obj,
+        "epochs": epochs, "chunk": p.chunk, "backend": p.backend,
+        "sparse": True, "density": p.density, "kmax": p.kmax, "nnz": p.nnz,
+        **res.breakdown(),
     }
 
 
@@ -450,7 +206,7 @@ if __name__ == "__main__":
     ap.add_argument("--batch", type=int, default=500)
     ap.add_argument("--epochs", type=int, default=3)
     ap.add_argument("--chunk", type=int, default=None,
-                    help="batches per device call (default: whole epoch)")
+                    help="batches per device call (default: planner budget)")
     ap.add_argument("--solvers", type=str, default=None,
                     help="comma-separated subset of " + ",".join(SOLVERS)
                          + " (default: all dense, mbsgd sparse)")

@@ -1,39 +1,35 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds, through the unified API.
 
-Solves l2-regularized logistic ERM with SAGA under the three sampling
-schemes and prints per-epoch wall time + final objective — systematic /
-cyclic sampling reach the same objective several times faster than random
-sampling (Chauhan, Sharma, Dahiya: Applied Intelligence 2018).
+Declare an ExperimentSpec per sampling scheme, let plan() pick the backend
+(in-memory arrays lower to the device-resident epoch engine), and execute()
+returns the timing breakdown and convergence trace — systematic / cyclic
+sampling reach the same objective several times faster than random sampling
+(Chauhan, Sharma, Dahiya: Applied Intelligence 2018).
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import time
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import (ERMProblem, SolverConfig, run, samplers,
-                        synth_classification)
+from repro.api import (DataSource, ExperimentSpec, SCHEMES, execute, plan)
+from repro.core import synth_classification
 
 
 def main():
     key = jax.random.PRNGKey(0)
     l, n = 65536, 64
     X, y, _ = synth_classification(key, l, n, separation=2.0)
-    prob = ERMProblem(loss="logistic", reg=1e-3)
-    L = float(prob.lipschitz(X))
-    cfg = SolverConfig(solver="saga", step_mode="constant", step_size=1.0 / L)
-    w0 = jnp.zeros(n)
+    data = DataSource.arrays(X, y)
 
-    print(f"{'scheme':12s} {'epochs':>6s} {'time':>8s} {'objective':>12s}")
-    for scheme in samplers.SCHEMES:
-        # compile warmup
-        run(prob, cfg, scheme, X, y, w0, batch_size=512, epochs=1,
-            record_objective=False)
-        t0 = time.perf_counter()
-        w, hist = run(prob, cfg, scheme, X, y, w0, batch_size=512, epochs=10)
-        dt = time.perf_counter() - t0
-        print(f"{scheme:12s} {10:6d} {dt:7.2f}s {float(hist[-1]):12.8f}")
+    print(f"{'scheme':12s} {'backend':16s} {'epochs':>6s} {'time':>8s} "
+          f"{'objective':>12s}")
+    for scheme in SCHEMES:
+        spec = ExperimentSpec(data=data, loss="logistic", reg=1e-3,
+                              solver="saga", scheme=scheme,
+                              batch_size=512, epochs=10)
+        p = plan(spec)          # step size (1/L), placement, kernel, chunking
+        res = execute(p)        # compiles untimed, then runs the budget
+        print(f"{scheme:12s} {p.backend:16s} {res.epochs_run:6d} "
+              f"{res.train_s:7.2f}s {res.objective:12.8f}")
     print("\ncontiguous access (cyclic/systematic) is the paper's speedup;"
           "\nsee benchmarks/erm_timing.py for the full Tables 2-4 sweep.")
 

@@ -1,4 +1,14 @@
 """repro — 'Faster Learning by Reduction of Data Access Time' (Chauhan et al.,
 Applied Intelligence 2018) as a production-grade multi-pod JAX framework.
+
+The experiment surface lives in :mod:`repro.api` (ExperimentSpec → plan →
+execute); it is loaded lazily so ``import repro`` stays light.
 """
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    if name == "api":
+        from . import api
+        return api
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

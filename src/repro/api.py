@@ -1,0 +1,33 @@
+"""repro.api — the single import surface for running experiments.
+
+Everything the paper's matrix (and its execution backends) needs is three
+names: declare an :class:`ExperimentSpec`, lower it with :func:`plan`, run
+it with :func:`execute` (or one-shot :func:`run_experiment`):
+
+    from repro.api import DataSource, ExperimentSpec, run_experiment
+
+    spec = ExperimentSpec(data=DataSource.corpus("corpus.bin"),
+                          solver="saga", scheme="systematic", epochs=5)
+    result = run_experiment(spec)
+    print(result.objective, result.breakdown())
+
+See :mod:`repro.core.experiment` for the planner rules and the
+backend-selection matrix.
+"""
+from .core.experiment import (  # noqa: F401
+    ARRAYS, AUTO, BACKENDS, CSR, DENSE, EAGER, FUSED, LOSSES, RESIDENT,
+    RESIDENT_EAGER, RESIDENT_FUSED, SPARSE_CSR, STREAMED, STREAMED_EAGER,
+    DataSource, ExecutionPlan, ExperimentSpec, PlanError, RunResult,
+    execute, plan, run_experiment)
+from .core.samplers import CYCLIC, RANDOM, SCHEMES, SYSTEMATIC  # noqa: F401
+from .core.solvers import CONSTANT, LINE_SEARCH, SOLVERS  # noqa: F401
+
+__all__ = [
+    "ARRAYS", "AUTO", "BACKENDS", "CSR", "DENSE", "EAGER", "FUSED",
+    "LOSSES", "RESIDENT", "RESIDENT_EAGER", "RESIDENT_FUSED", "SPARSE_CSR",
+    "STREAMED", "STREAMED_EAGER",
+    "CYCLIC", "RANDOM", "SCHEMES", "SYSTEMATIC",
+    "CONSTANT", "LINE_SEARCH", "SOLVERS",
+    "DataSource", "ExecutionPlan", "ExperimentSpec", "PlanError",
+    "RunResult", "execute", "plan", "run_experiment",
+]

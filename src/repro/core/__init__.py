@@ -1,9 +1,15 @@
 """Core of the reproduction: the paper's sampling schemes, the l2-ERM
 problem family, the five stochastic solvers, and the access-time cost model.
+
+Execution goes through :mod:`repro.core.experiment` (re-exported as
+:mod:`repro.api`): declare an ``ExperimentSpec``, lower it with ``plan()``,
+run it with ``execute()``.  The solver entry points in
+:mod:`repro.core.solvers` are internal backends the planner selects and are
+no longer exported here.
 """
 from . import access_model, erm, samplers, solvers  # noqa: F401
 from .erm import ERMProblem, synth_classification  # noqa: F401
 from .samplers import (CYCLIC, RANDOM, SCHEMES, SYSTEMATIC,  # noqa: F401
                        SamplerState, epoch_indices, make_sampler, next_batch)
 from .solvers import (MBSGD, SAAG2, SAG, SAGA, SOLVERS, SVRG,  # noqa: F401
-                      SolverConfig, run)
+                      SolverConfig)

@@ -1,0 +1,810 @@
+"""Unified ExperimentSpec → plan → run API over all execution paths.
+
+The paper's claim is a matrix — 5 solvers × {RS, CS, SS} sampling ×
+{constant, line-search} steps — and the epoch engines multiplied it by
+dense/CSR corpora, streamed/resident placement, and fused/eager kernels.
+Before this module every caller hand-wired its own combination of
+``SolverConfig`` flags and the four solver entry points.  Now there is one
+declarative surface:
+
+    spec = ExperimentSpec(data=DataSource.corpus("corpus.bin"),
+                          solver="saga", scheme="systematic", epochs=5)
+    result = execute(plan(spec))          # or run_experiment(spec)
+
+* :class:`ExperimentSpec` — a frozen description of WHAT to run: problem
+  (loss, reg), data source, sampling scheme, solver, step rule, and budget
+  (batch size, epochs, seed).  No execution detail leaks in; the overrides
+  (``placement``, ``kernel``, ``chunk``) default to ``"auto"``.
+* :func:`plan` — lowers a spec into an explicit :class:`ExecutionPlan`:
+  streamed vs resident (corpus bytes vs device memory), dense vs CSR,
+  fused vs eager kernels, and the chunked epoch shape.  Invalid
+  combinations fail HERE with a :class:`PlanError` naming the conflict —
+  never silently fall back at run time.  The chosen backend and every
+  decision's reason are recorded on the plan (``plan.why``,
+  ``plan.describe()``).
+* :func:`execute` — runs a plan and returns a uniform :class:`RunResult`:
+  convergence trace, :class:`~repro.data.pipeline.AccessStats`, wall-clock
+  breakdown, and resumable sampler/solver state.  ``execute(plan,
+  resume=prev)`` continues a run exactly where a previous result stopped
+  (same batch schedule a single uninterrupted run would have used).
+
+The four solver entry points (``run`` / ``make_step_fn`` /
+``make_epoch_fn`` / ``make_resident_epoch_fn`` in
+:mod:`repro.core.solvers`) are internal backends selected by the planner;
+``benchmarks/erm_timing.py`` and the examples go through this module only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from functools import partial
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import samplers
+from .erm import ERMProblem, LOGISTIC, SMOOTH_HINGE, SQUARE
+from .solvers import (CONSTANT, LINE_SEARCH, SOLVERS, SolverConfig,
+                      SolverState, epoch_begin, init_state, make_epoch_fn,
+                      make_resident_epoch_fn, streaming_full_grad)
+
+LOSSES = (LOGISTIC, SQUARE, SMOOTH_HINGE)
+
+# ---- spec-level knobs ------------------------------------------------------
+AUTO = "auto"
+STREAMED, RESIDENT = "streamed", "resident"     # placement
+FUSED, EAGER = "fused", "eager"                 # kernel
+
+# ---- data source kinds -----------------------------------------------------
+ARRAYS, DENSE, CSR = "arrays", "dense", "csr"
+
+# ---- backends the planner can select ---------------------------------------
+STREAMED_EAGER = "streamed-eager"    # DataPipeline + chunked epoch engine
+SPARSE_CSR = "sparse-csr"            # SparsePipeline + sparse chunked engine
+RESIDENT_EAGER = "resident-eager"    # in-graph epochs, gather/dynamic_slice
+RESIDENT_FUSED = "resident-fused"    # in-graph epochs, fused Pallas kernels
+BACKENDS = (STREAMED_EAGER, SPARSE_CSR, RESIDENT_EAGER, RESIDENT_FUSED)
+
+# resident-placement budget when the device reports no memory stats
+# (CPU hosts): stage corpora up to this size, stream anything larger
+DEFAULT_RESIDENT_BUDGET = 1 << 30
+# per staged chunk when spec.chunk is unset (matches the benchmark's
+# historical default)
+_CHUNK_BYTE_BUDGET = 64 << 20
+_STEP_SAMPLE_ROWS = 4096       # rows sampled for the auto 1/L step size
+_EVAL_CHUNK = 8192             # rows per streamed objective/gradient chunk
+
+
+class PlanError(ValueError):
+    """A spec combination that cannot execute — raised by :func:`plan` with
+    the reason, instead of a silent fallback at run time."""
+
+
+# ---------------------------------------------------------------------------
+# data sources
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DataSource:
+    """Where the training data lives.
+
+    Use the constructors: :meth:`arrays` for in-memory ``(X, y)`` (device-
+    resident by construction), :meth:`corpus` for an on-disk corpus — a
+    dense memmap (``dataset.write_corpus``/``synth_erm_corpus``) or a CSR
+    directory (``sparse.write_csr_corpus``/``synth_sparse_classification``),
+    sniffed by layout.  The array payload is excluded from equality so specs
+    stay hashable/comparable.
+    """
+    kind: str                                   # ARRAYS | DENSE | CSR
+    path: Optional[Path] = None
+    X: Optional[object] = dataclasses.field(default=None, compare=False,
+                                            repr=False)
+    y: Optional[object] = dataclasses.field(default=None, compare=False,
+                                            repr=False)
+
+    @staticmethod
+    def arrays(X, y) -> "DataSource":
+        if getattr(X, "ndim", None) != 2 or X.shape[0] != len(y):
+            raise PlanError("DataSource.arrays wants X: (l, n) with y: (l,)")
+        return DataSource(ARRAYS, X=X, y=y)
+
+    @staticmethod
+    def corpus(path) -> "DataSource":
+        path = Path(path)
+        if (path / "meta.json").exists():           # CSR corpus directory
+            return DataSource(CSR, path=path)
+        return DataSource(DENSE, path=path)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Frozen description of one experiment: problem + data + scheme +
+    solver + step rule + budget.
+
+    The last block (``placement`` / ``kernel`` / ``chunk`` / ``prefetch`` /
+    ``resident_budget``) overrides planner decisions; the defaults let
+    :func:`plan` choose from the data's size and format.
+    """
+    data: DataSource
+    # problem
+    loss: str = LOGISTIC
+    reg: float = 1e-4
+    # method
+    solver: str = "mbsgd"
+    scheme: str = samplers.SYSTEMATIC
+    step_mode: str = CONSTANT
+    step_size: Optional[float] = None   # None → 1/L (constant) or 1.0 (LS)
+    # budget
+    batch_size: int = 500
+    epochs: int = 3
+    seed: int = 0
+    record_objective: bool = True       # per-epoch trace (final obj always)
+    # execution overrides (AUTO lets the planner decide)
+    placement: str = AUTO               # AUTO | STREAMED | RESIDENT
+    kernel: str = AUTO                  # AUTO | FUSED | EAGER
+    chunk: Optional[int] = None         # batches per device call (streamed)
+    prefetch: int = 2                   # pipeline read-ahead (streamed)
+    resident_budget: Optional[int] = None   # bytes; None → device stats
+
+    @property
+    def problem(self) -> ERMProblem:
+        return ERMProblem(loss=self.loss, reg=self.reg)
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Explicit lowering of a spec: which backend runs, with what shapes.
+
+    Everything a reader needs to know what WILL happen is here before
+    anything executes — the selected backend, the resolved
+    :class:`SolverConfig` (step size filled in), the corpus scale, and the
+    chunked epoch shape.  ``why`` records each planner decision.
+    """
+    spec: ExperimentSpec
+    backend: str          # one of BACKENDS
+    placement: str        # STREAMED | RESIDENT
+    kernel: str           # EAGER | FUSED
+    fmt: str              # DENSE | CSR (ARRAYS lowers to DENSE)
+    cfg: SolverConfig     # resolved solver config (step size, flags)
+    rows: int
+    features: int
+    num_batches: int      # m, batches per epoch
+    chunk: int            # K, batches per device call (m when resident)
+    corpus_bytes: int
+    kmax: int = 0         # densest CSR row (sparse only)
+    nnz: int = 0          # stored nonzeros (sparse only)
+    why: Tuple[str, ...] = ()
+
+    @property
+    def density(self) -> float:
+        return self.nnz / max(1, self.rows * self.features)
+
+    def describe(self) -> str:
+        lines = [
+            f"backend   : {self.backend}",
+            f"data      : {self.fmt} {self.rows}x{self.features} "
+            f"({self.corpus_bytes / 1e6:.1f} MB"
+            + (f", nnz={self.nnz}, kmax={self.kmax}" if self.fmt == CSR
+               else "") + ")",
+            f"method    : {self.cfg.solver}/{self.cfg.step_mode} under "
+            f"{self.spec.scheme} sampling, step={self.cfg.step_size:.3g}",
+            f"epoch     : m={self.num_batches} batches of "
+            f"{self.spec.batch_size}, {self.chunk} per device call, "
+            f"{self.spec.epochs} epochs",
+        ]
+        lines += [f"  - {w}" for w in self.why]
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class _Probe:
+    """What the planner learned by looking at the data source."""
+    fmt: str
+    rows: int
+    features: int
+    nbytes: int
+    kmax: int = 0
+    nnz: int = 0
+
+
+def _probe(data: DataSource) -> _Probe:
+    if data.kind == ARRAYS:
+        X, y = data.X, data.y
+        return _Probe(DENSE, X.shape[0], X.shape[1],
+                      int(X.nbytes + np.asarray(y).nbytes))
+    if data.path is None:
+        raise PlanError("corpus DataSource has no path")
+    if data.kind == CSR:
+        from ..data import sparse
+        csr = sparse.open_csr_corpus(data.path)
+        return _Probe(CSR, csr.rows, csr.features, csr.meta.nbytes,
+                      kmax=csr.kmax, nnz=csr.nnz)
+    from ..data import dataset
+    _, meta = dataset.open_corpus(data.path)
+    return _Probe(DENSE, meta.rows, meta.row_dim - 1, meta.nbytes)
+
+
+def _fused_support(spec: ExperimentSpec, probe: _Probe) -> Tuple[bool, str]:
+    """(supported, reason-if-not) for the fused Pallas gradient kernels."""
+    if probe.fmt == CSR:
+        return False, ("fused kernels are dense-only; CSR corpora keep the "
+                       "sparse chunked engine")
+    if spec.step_mode != CONSTANT:
+        return False, ("line search evaluates trial objectives on the "
+                       "materialized batch; fused path is constant-step only")
+    try:
+        from ..kernels import fused_erm  # pallas availability
+    except ImportError:
+        return False, "pallas/fused kernels unavailable in this environment"
+    # the kernel module's OWN support set, not this planner's loss enum
+    if spec.loss not in fused_erm.LOSSES:
+        return False, f"loss {spec.loss!r} has no fused kernel"
+    return True, ""
+
+
+def _resident_budget(spec: ExperimentSpec) -> int:
+    if spec.resident_budget is not None:
+        return spec.resident_budget
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        if stats and stats.get("bytes_limit"):
+            # leave headroom for solver state, staging and compiler scratch
+            return int(stats["bytes_limit"] * 0.6)
+    except Exception:
+        pass
+    return DEFAULT_RESIDENT_BUDGET
+
+
+def plan(spec: ExperimentSpec) -> ExecutionPlan:
+    """Lower a spec to an :class:`ExecutionPlan`, rejecting combinations
+    that cannot run with a :class:`PlanError` that names the conflict."""
+    # ---- enum validation (fail with the full menu, not a KeyError later)
+    if spec.solver not in SOLVERS:
+        raise PlanError(f"unknown solver {spec.solver!r}; want one of {SOLVERS}")
+    if spec.scheme not in samplers.SCHEMES:
+        raise PlanError(f"unknown scheme {spec.scheme!r}; want one of "
+                        f"{samplers.SCHEMES}")
+    if spec.step_mode not in (CONSTANT, LINE_SEARCH):
+        raise PlanError(f"unknown step_mode {spec.step_mode!r}; want "
+                        f"{(CONSTANT, LINE_SEARCH)}")
+    if spec.loss not in LOSSES:
+        raise PlanError(f"unknown loss {spec.loss!r}; want one of {LOSSES}")
+    if spec.placement not in (AUTO, STREAMED, RESIDENT):
+        raise PlanError(f"placement must be auto/streamed/resident, got "
+                        f"{spec.placement!r}")
+    if spec.kernel not in (AUTO, FUSED, EAGER):
+        raise PlanError(f"kernel must be auto/fused/eager, got {spec.kernel!r}")
+    if spec.batch_size <= 0 or spec.epochs <= 0:
+        raise PlanError("batch_size and epochs must be positive")
+
+    probe = _probe(spec.data)
+    if spec.batch_size > probe.rows:
+        raise PlanError(
+            f"batch_size {spec.batch_size} exceeds the corpus "
+            f"({probe.rows} rows) — the samplers pad the TRAILING batch by "
+            f"wrap-around, they don't oversample the whole corpus")
+    why: List[str] = []
+
+    # ---- placement: streamed vs resident --------------------------------
+    if spec.data.kind == ARRAYS:
+        if spec.placement == STREAMED:
+            raise PlanError("in-memory arrays have no corpus to stream; use "
+                            "a DataSource.corpus(...) for streamed placement")
+        placement = RESIDENT
+        why.append("arrays are device-resident by construction")
+    elif probe.fmt == CSR:
+        if spec.placement == RESIDENT:
+            raise PlanError(
+                "resident placement stages a dense (l, n) corpus; CSR "
+                "corpora run the streamed sparse engine (sparse resident "
+                "mode is a ROADMAP follow-on)")
+        placement = STREAMED
+        why.append("CSR corpus → streamed sparse engine")
+    elif spec.placement != AUTO:
+        placement = spec.placement
+        why.append(f"placement {placement!r} forced by spec")
+    else:
+        budget = _resident_budget(spec)
+        if probe.nbytes <= budget:
+            placement = RESIDENT
+            why.append(f"corpus {probe.nbytes / 1e6:.1f} MB fits the "
+                       f"{budget / 1e6:.0f} MB device budget → resident")
+        else:
+            placement = STREAMED
+            why.append(f"corpus {probe.nbytes / 1e6:.1f} MB exceeds the "
+                       f"{budget / 1e6:.0f} MB device budget → streamed")
+
+    # ---- kernel: fused vs eager ------------------------------------------
+    ok, reason = _fused_support(spec, probe)
+    if spec.kernel == FUSED:
+        if not ok:
+            raise PlanError(f"kernel='fused' rejected: {reason}")
+        if placement != RESIDENT:
+            raise PlanError(
+                "kernel='fused' rejected: the fused gather+grad kernels "
+                "sample from a device-resident corpus; the streamed engine "
+                "consumes staged batches, which are materialized by "
+                "construction (force placement='resident' or drop the "
+                "kernel override)")
+        kernel = FUSED
+        why.append("fused kernels forced by spec")
+    elif spec.kernel == EAGER or placement != RESIDENT:
+        kernel = EAGER
+    elif not ok:
+        kernel = EAGER
+        why.append(f"fused kernels skipped: {reason}")
+    elif jax.default_backend() != "tpu":
+        # auto mode optimizes wall clock: off-TPU the kernels run in
+        # interpret mode (a parity path, not a fast path)
+        kernel = EAGER
+        why.append("fused kernels available but interpret-only off TPU; "
+                   "pass kernel='fused' to force")
+    else:
+        kernel = FUSED
+        why.append("resident + constant step + supported loss → fused "
+                   "kernels by default")
+
+    # ---- chunk shape (streamed) and solver config ------------------------
+    m = samplers.num_batches(probe.rows, spec.batch_size)
+    if placement == RESIDENT:
+        chunk = m      # whole epoch per device call, in-graph selection
+        if spec.chunk is not None:
+            # not an error (auto placement may legitimately pick resident),
+            # but never silent: the override has no effect here
+            why.append(f"spec.chunk={spec.chunk} ignored: resident runs the "
+                       "whole epoch in-graph, there is no staged chunking")
+    else:
+        if spec.chunk is not None:
+            chunk = max(1, min(spec.chunk, m))
+            why.append(f"chunk K={chunk} forced by spec")
+        else:
+            if probe.fmt == CSR:
+                per_batch = spec.batch_size * (probe.kmax * 8 + 4)
+            else:
+                per_batch = spec.batch_size * (probe.features + 1) * 4
+            chunk = max(1, min(_CHUNK_BYTE_BUDGET // max(per_batch, 1), m))
+
+    step_size = (spec.step_size if spec.step_size is not None
+                 else _auto_step_size(spec, probe))
+    cfg = SolverConfig(solver=spec.solver, step_mode=spec.step_mode,
+                       step_size=step_size, use_fused=(kernel == FUSED),
+                       sparse=(probe.fmt == CSR))
+
+    if probe.fmt == CSR:
+        backend = SPARSE_CSR
+    elif placement == RESIDENT:
+        backend = RESIDENT_FUSED if kernel == FUSED else RESIDENT_EAGER
+    else:
+        backend = STREAMED_EAGER
+    return ExecutionPlan(spec=spec, backend=backend, placement=placement,
+                         kernel=kernel, fmt=probe.fmt, cfg=cfg,
+                         rows=probe.rows, features=probe.features,
+                         num_batches=m, chunk=chunk,
+                         corpus_bytes=probe.nbytes, kmax=probe.kmax,
+                         nnz=probe.nnz, why=tuple(why))
+
+
+def _auto_step_size(spec: ExperimentSpec, probe: _Probe) -> float:
+    """Paper §4.1 defaults: constant step = 1/L, line search starts at 1."""
+    if spec.step_mode == LINE_SEARCH:
+        return 1.0
+    problem = spec.problem
+    if probe.fmt == CSR:
+        from ..data import sparse
+        return 1.0 / sparse.csr_lipschitz(problem, sparse.open_csr_corpus(
+            spec.data.path))
+    if spec.data.kind == ARRAYS:
+        sample = jnp.asarray(spec.data.X[:_STEP_SAMPLE_ROWS])
+    else:
+        from ..data import dataset
+        mm, meta = dataset.open_corpus(spec.data.path)
+        sample = jnp.asarray(mm[:_STEP_SAMPLE_ROWS, :meta.row_dim - 1])
+    return 1.0 / float(problem.lipschitz(sample))
+
+
+# ---------------------------------------------------------------------------
+# the result
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    """Uniform outcome of :func:`execute` across every backend.
+
+    ``history`` is the per-epoch objective trace (empty when
+    ``spec.record_objective`` is off — ``objective`` is always the final
+    full-corpus value).  ``solver_state``/``sampler_state`` resume the run:
+    pass the result back as ``execute(plan, resume=result)`` and the batch
+    schedule continues exactly where an uninterrupted run would be.
+    """
+    plan: ExecutionPlan
+    objective: float
+    history: np.ndarray
+    w: np.ndarray
+    solver_state: SolverState
+    sampler_state: Dict
+    epochs_run: int            # epochs executed by THIS call
+    epochs_done: int           # cumulative, including resumed-from epochs
+    stats: "AccessStats"       # noqa: F821 — repro.data.pipeline.AccessStats
+    train_s: float
+    compute_s: float
+
+    def breakdown(self) -> Dict[str, float]:
+        """Per-epoch wall-clock decomposition in the BENCH_erm schema."""
+        st, e = self.stats, max(self.epochs_run, 1)
+        m, K = self.plan.num_batches, self.plan.chunk
+        out = {"epoch_s": self.train_s / e,
+               "compute_s_per_epoch": self.compute_s / e,
+               "access_mb_per_s": st.read_mb_per_s,
+               "objective": self.objective}
+        if self.plan.placement == RESIDENT:
+            out.update(
+                access_s_per_epoch=st.access_s / e,      # one-time, amortized
+                h2d_s_per_epoch=st.h2d_s / e,
+                h2d_saved_s_per_epoch=st.h2d_saved_s / e,
+                access_mb_per_epoch=st.read_mb / e)
+        else:
+            out.update(
+                access_s_per_epoch=st.s_per_batch * m,   # producer thread
+                h2d_s_per_epoch=st.h2d_s / max(st.staged, 1) * (-(-m // K)),
+                access_mb_per_epoch=st.read_mb / max(st.batches, 1) * m)
+        return out
+
+    def to_json(self) -> Dict:
+        """JSON-safe summary (the CI artifact schema) — resumable state is
+        the sampler side only; the solver pytree stays in memory."""
+        p = self.plan
+        return {
+            "schema": 1,
+            "backend": p.backend,
+            "plan": {"placement": p.placement, "kernel": p.kernel,
+                     "format": p.fmt, "solver": p.cfg.solver,
+                     "step_mode": p.cfg.step_mode,
+                     "step_size": p.cfg.step_size, "scheme": p.spec.scheme,
+                     "batch_size": p.spec.batch_size, "rows": p.rows,
+                     "features": p.features, "num_batches": p.num_batches,
+                     "chunk": p.chunk, "corpus_bytes": p.corpus_bytes,
+                     "why": list(p.why)},
+            "epochs_run": self.epochs_run,
+            "epochs_done": self.epochs_done,
+            "objective": self.objective,
+            "history": [float(h) for h in self.history],
+            "w_norm": float(np.linalg.norm(self.w)),
+            "sampler_state": self.sampler_state,
+            "breakdown": self.breakdown(),
+            "stats": dataclasses.asdict(self.stats),
+        }
+
+    def save_json(self, path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=2) + "\n")
+        return path
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def execute(plan_: ExecutionPlan, *, resume: Optional[RunResult] = None,
+            epochs: Optional[int] = None) -> RunResult:
+    """Run a plan for ``epochs`` epochs (default: the spec's budget).
+
+    ``resume`` continues from a previous result OF THE SAME PLAN: the solver
+    state is copied (the stored result stays usable) and the sampler resumes
+    at the exact step an uninterrupted run would be at.
+    """
+    epochs = plan_.spec.epochs if epochs is None else epochs
+    if resume is not None:
+        prev, cur = resume.plan.spec.data, plan_.spec.data
+        # DataSource equality deliberately excludes array payloads (specs
+        # stay hashable), so in-memory sources additionally require the
+        # SAME arrays — resuming SAG/SAGA gradient memory against other
+        # data would silently corrupt the run
+        same_arrays = (prev.kind != ARRAYS
+                       or (prev.X is cur.X and prev.y is cur.y))
+        if resume.plan != plan_ or not same_arrays:
+            raise ValueError(
+                f"resume result came from a different plan "
+                f"(backend {resume.plan.backend!r}, solver "
+                f"{resume.plan.cfg.solver!r}, seed {resume.plan.spec.seed}) "
+                f"than the one being executed ({plan_.backend!r}, "
+                f"{plan_.cfg.solver!r}, seed {plan_.spec.seed}) — a resumed "
+                f"run must continue the SAME plan (and, for in-memory "
+                f"sources, the same arrays) or the batch schedule silently "
+                f"diverges from an uninterrupted run")
+    if plan_.placement == RESIDENT:
+        return _execute_resident(plan_, resume, epochs)
+    return _execute_streamed(plan_, resume, epochs)
+
+
+def run_experiment(spec: ExperimentSpec) -> RunResult:
+    """``execute(plan(spec))`` — the one-call path."""
+    return execute(plan(spec))
+
+
+def _resume_state(plan_: ExecutionPlan, resume: Optional[RunResult],
+                  ) -> Tuple[SolverState, int]:
+    """(initial solver state, epochs already done).  The resumed state is
+    COPIED: the chunked engines donate their state argument, and consuming
+    the caller's stored result would break resuming twice."""
+    if resume is None:
+        w0 = jnp.zeros(plan_.features, jnp.float32)
+        return init_state(plan_.cfg.solver, w0, plan_.num_batches), 0
+    state = jax.tree_util.tree_map(jnp.array, resume.solver_state)
+    return state, resume.epochs_done
+
+
+# ---- resident backends -----------------------------------------------------
+
+@partial(jax.jit, static_argnames=("problem",))
+def _objective_jit(problem: ERMProblem, w: jax.Array, X: jax.Array,
+                   y: jax.Array) -> jax.Array:
+    # module-level so the compile cache survives across execute() calls —
+    # a fresh jit(lambda ...) per call would retrace every time
+    return problem.objective(w, X, y)
+
+
+def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
+                      epochs: int) -> RunResult:
+    from ..data import pipeline as pipemod
+
+    spec, cfg = plan_.spec, plan_.cfg
+    problem = spec.problem
+    stats = pipemod.AccessStats()
+    h2d_dt = 0.0
+
+    if spec.data.kind == ARRAYS:
+        X = jnp.asarray(spec.data.X, jnp.float32)
+        y = jnp.asarray(spec.data.y, jnp.float32)
+    else:
+        pipe = pipemod.DataPipeline(pipemod.PipelineConfig(
+            corpus=spec.data.path, batch_size=spec.batch_size,
+            sampling=spec.scheme, seed=spec.seed, prefetch=0, resident=True))
+        stats = pipe.stats
+        rows = pipe.read_all()
+        n = plan_.features
+        # contiguity copies BEFORE the timer: device_put of a strided view
+        # would hide a host-side memcpy inside the H2D number
+        Xh = np.ascontiguousarray(rows[:, :n])
+        yh = np.ascontiguousarray(rows[:, n])
+        t0 = time.perf_counter()
+        X, y = jax.block_until_ready((jax.device_put(Xh), jax.device_put(yh)))
+        h2d_dt = time.perf_counter() - t0
+        stats.record_h2d(h2d_dt, Xh.nbytes + yh.nbytes)
+
+    epoch_fn = make_resident_epoch_fn(problem, cfg, spec.scheme,
+                                      spec.batch_size)
+    obj = lambda w: _objective_jit(problem, w, X, y)
+    state, done0 = _resume_state(plan_, resume)
+
+    if resume is None:
+        # compile (epoch fn, embedded snapshot refresh, objective) untimed;
+        # a resumed call reuses the original call's jit cache, and paying a
+        # full warmup epoch per segment would double the device work of
+        # epoch-at-a-time drivers like benchmarks/erm_convergence.py
+        dummy = init_state(cfg.solver, jnp.zeros(plan_.features, jnp.float32),
+                           plan_.num_batches)
+        jax.block_until_ready(epoch_fn(dummy, X, y, jax.random.PRNGKey(1)).w)
+        jax.block_until_ready(obj(state.w))
+
+    # the epoch key schedule is pure in (seed, epoch index): replaying the
+    # splits makes a resumed run use the batch schedule the uninterrupted
+    # run would have used
+    key = jax.random.PRNGKey(spec.seed)
+    for _ in range(done0):
+        key, _ = jax.random.split(key)
+
+    history: List[float] = []
+    compute_s = 0.0
+    train_s = 0.0
+    for e in range(epochs):
+        key, sub = jax.random.split(key)
+        tc = time.perf_counter()
+        state = epoch_fn(state, X, y, sub)
+        jax.block_until_ready(state.w)
+        dt = time.perf_counter() - tc
+        compute_s += dt
+        train_s += dt
+        if spec.data.kind != ARRAYS and e > 0:
+            # every epoch after the first of THIS call would have restaged
+            # the corpus (a resumed call pays its own staging, so its first
+            # epoch saved nothing — crediting per-call keeps split runs'
+            # totals consistent with their actual staging count)
+            stats.record_h2d_saved(h2d_dt)
+        if spec.record_objective:
+            history.append(float(obj(state.w)))     # outside the timers
+
+    objective = history[-1] if history else float(obj(state.w))
+    return RunResult(
+        plan=plan_, objective=objective, history=np.asarray(history),
+        w=np.asarray(state.w), solver_state=state,
+        sampler_state={"scheme": spec.scheme, "seed": spec.seed,
+                       "epochs": done0 + epochs},
+        epochs_run=epochs, epochs_done=done0 + epochs, stats=stats,
+        train_s=train_s, compute_s=compute_s)
+
+
+# ---- streamed backends -----------------------------------------------------
+
+def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
+                      epochs: int) -> RunResult:
+    from ..data import pipeline as pipemod
+
+    spec, cfg = plan_.spec, plan_.cfg
+    problem = spec.problem
+    m, K, n = plan_.num_batches, plan_.chunk, plan_.features
+    b = spec.batch_size
+    state, done0 = _resume_state(plan_, resume)
+    start_step = done0 * m
+    epoch_fn = make_epoch_fn(problem, cfg)
+
+    pcfg = pipemod.PipelineConfig(corpus=spec.data.path, batch_size=b,
+                                  sampling=spec.scheme, seed=spec.seed,
+                                  prefetch=spec.prefetch)
+    if plan_.fmt == CSR:
+        from ..data import sparse
+        csr = sparse.open_csr_corpus(spec.data.path)
+        kmax = plan_.kmax if plan_.kmax else csr.kmax
+        pipe = sparse.SparsePipeline(pcfg, start_step=start_step)
+
+        def alloc(k):
+            return (np.empty((k, b, kmax), np.int32),
+                    np.empty((k, b, kmax), np.float32),
+                    np.empty((k, b), np.float32))
+
+        def fill(bufs, i, sb):
+            bufs[0][i], bufs[1][i], bufs[2][i] = sb.cols, sb.vals, sb.y
+
+        def zeros(k):
+            return (jnp.zeros((k, b, kmax), jnp.int32),
+                    jnp.zeros((k, b, kmax), jnp.float32),
+                    jnp.zeros((k, b), jnp.float32))
+
+        def full_grad_at(w, data_term_only=False):
+            return jnp.asarray(sparse.csr_full_grad(
+                problem, csr, np.asarray(w), data_term_only=data_term_only))
+
+        def eval_obj(w):
+            return sparse.csr_objective(problem, csr, np.asarray(w))
+    else:
+        from ..data import dataset
+        mm, _ = dataset.open_corpus(spec.data.path)
+        pipe = pipemod.DataPipeline(pcfg, start_step=start_step)
+
+        def alloc(k):
+            return (np.empty((k, b, n), np.float32),
+                    np.empty((k, b), np.float32))
+
+        def fill(bufs, i, rows):
+            bufs[0][i] = rows[:, :n]
+            bufs[1][i] = rows[:, n]
+
+        def zeros(k):
+            return (jnp.zeros((k, b, n), jnp.float32),
+                    jnp.zeros((k, b), jnp.float32))
+
+        def _row_chunks():
+            for lo in range(0, plan_.rows, _EVAL_CHUNK):
+                rows = np.asarray(mm[lo:lo + _EVAL_CHUNK])
+                yield rows[:, :n], rows[:, n]
+
+        def full_grad_at(w, data_term_only=False):
+            return streaming_full_grad(problem, w, _row_chunks(),
+                                       data_term_only=data_term_only)
+
+        def eval_obj(w):
+            total = 0.0
+            for Xc, yc in _row_chunks():
+                total += float(problem.data_objective(
+                    w, jnp.asarray(Xc), jnp.asarray(yc))) * Xc.shape[0]
+            return (total / plan_.rows
+                    + 0.5 * problem.reg * float(jnp.dot(w, w)))
+
+    # compile every chunk shape outside the timed region
+    for k in sorted({K, m % K} - {0}):
+        dummy = init_state(cfg.solver, jnp.zeros(n, jnp.float32), m)
+        jax.block_until_ready(epoch_fn(dummy, *zeros(k),
+                                       jnp.zeros((k,), jnp.int32)))
+
+    snapshot_begin = None
+    if cfg.solver in ("svrg", "saag2"):
+        data_only = cfg.solver == "saag2"
+        # the snapshot full-grad stream compiles too — keep it out of epoch 1
+        jax.block_until_ready(full_grad_at(jnp.zeros(n, jnp.float32),
+                                           data_term_only=data_only))
+        snapshot_begin = lambda st: epoch_begin(
+            problem, cfg, st,
+            lambda w: full_grad_at(w, data_term_only=data_only))
+
+    state, history, compute_s, train_s = _drive_chunked(
+        pipe, epoch_fn, state, m=m, K=K, epochs=epochs,
+        start_step=start_step, alloc=alloc, fill=fill,
+        snapshot_begin=snapshot_begin,
+        eval_fn=eval_obj if spec.record_objective else None)
+
+    objective = history[-1] if history else eval_obj(state.w)
+    return RunResult(
+        plan=plan_, objective=objective, history=np.asarray(history),
+        w=np.asarray(state.w), solver_state=state,
+        # deterministic count of CONSUMED batches — the prefetch producer
+        # may have advanced the live sampler a few steps further
+        sampler_state={"scheme": spec.scheme, "seed": spec.seed,
+                       "step": start_step + m * epochs},
+        epochs_run=epochs, epochs_done=done0 + epochs, stats=pipe.stats,
+        train_s=train_s, compute_s=compute_s)
+
+
+def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
+                   start_step: int, alloc: Callable, fill: Callable,
+                   snapshot_begin: Optional[Callable],
+                   eval_fn: Optional[Callable],
+                   ) -> Tuple[SolverState, List[float], float, float]:
+    """The shared streaming engine under the dense and sparse backends:
+    group the pipeline's batch stream into <=K-batch chunks (never crossing
+    an epoch boundary — snapshot solvers refresh state between epochs),
+    double-buffer them host->device (DeviceStager), and scan each chunk in
+    one device call.
+
+    ``alloc(k)`` builds contiguous host staging buffers for a k-batch chunk
+    (batches are written straight in — one copy, not stack-then-slice);
+    ``fill(bufs, i, batch)`` writes batch i; ``eval_fn(w)`` is the per-epoch
+    objective probe, run OUTSIDE the timers.  Returns
+    (state, history, compute_s, train_s).
+    """
+    from ..data import pipeline as pipemod
+
+    def host_chunks():
+        it = iter(pipe)
+        step, total = start_step, start_step + m * epochs
+        while step < total:
+            j0 = step % m
+            k = min(K, m - j0)
+            bufs = alloc(k)
+            for i in range(k):
+                fill(bufs, i, next(it))
+            yield bufs + (j0,)
+            step += k
+
+    def convert(arg):
+        *bufs, j0 = arg
+        js = (np.arange(j0, j0 + bufs[0].shape[0]) % m).astype(np.int32)
+        return tuple(bufs) + (js,)
+
+    stager = pipemod.DeviceStager(host_chunks(), put=_put_blocking,
+                                  convert=convert, depth=2, stats=pipe.stats)
+    chunks_iter = iter(stager)
+    history: List[float] = []
+    compute_s = 0.0
+    train_s = 0.0
+    try:
+        for _ in range(epochs):
+            te = time.perf_counter()
+            if snapshot_begin is not None:
+                state = snapshot_begin(state)
+            done = 0
+            while done < m:
+                args = next(chunks_iter)
+                tc = time.perf_counter()
+                state = epoch_fn(state, *args)
+                jax.block_until_ready(state.w)
+                compute_s += time.perf_counter() - tc
+                done += args[0].shape[0]
+            train_s += time.perf_counter() - te
+            if eval_fn is not None:
+                history.append(float(eval_fn(state.w)))   # untimed
+    finally:
+        stager.close()
+        pipe.close()
+    return state, history, compute_s, train_s
+
+
+def _put_blocking(host):
+    return jax.block_until_ready(tuple(jax.device_put(a) for a in host))

@@ -12,7 +12,10 @@ Solvers (step 7 of Algorithm 1):
               iterate and the l2 regularizer is applied exactly at every
               step (biased variance reduction)                          [3]
 
-Two execution modes:
+Execution backends — INTERNAL to the planner.  Callers declare an
+``ExperimentSpec`` and go through :func:`repro.core.experiment.plan` /
+``execute``; the planner selects among these entry points (they are no
+longer exported from ``repro.core``):
 
 * :func:`run` — fully jit'd device-resident loop (``lax.scan`` over batches,
   Python loop over epochs). Batch selection happens IN-GRAPH with the paper's
@@ -24,6 +27,8 @@ Two execution modes:
   what ``benchmarks/erm_timing.py`` times.  ``make_epoch_fn`` is the chunked
   epoch engine: ONE device call scans K staged batches with donated solver
   state, amortizing per-batch Python dispatch K-fold.
+* :func:`make_resident_epoch_fn` — fused host mode: the whole corpus staged
+  on device once, epochs driven in-graph.
 
 Set ``SolverConfig(use_fused=True)`` to route device-resident gradients
 through the fused Pallas kernels (``repro.kernels.fused_erm``): the sampled
@@ -345,6 +350,15 @@ def make_step_fn(problem: ERMProblem, cfg: SolverConfig):
     Dense: ``(state, Xb, yb, j) -> state``.  With ``cfg.sparse``:
     ``(state, cols, vals, yb, j) -> state`` on padded-ELL CSR batches.
     """
+    if cfg.use_fused:
+        # the per-batch host step consumes an already-materialized batch;
+        # silently ignoring the flag here used to misreport what ran —
+        # the planner (repro.core.experiment.plan) rejects the combo with
+        # the same message before execution ever starts
+        raise ValueError(
+            "use_fused applies to the device-resident epoch runners: "
+            "make_step_fn consumes materialized batches, which leaves "
+            "nothing to fuse")
     if cfg.sparse:
         @jax.jit
         def sparse_step(state: SolverState, cols: jax.Array, vals: jax.Array,

@@ -33,6 +33,17 @@ class CorpusMeta:
 
     _EXTENSION_KEYS = ("fmt", "nnz", "max_row_nnz")
 
+    @property
+    def nbytes(self) -> int:
+        """On-disk payload bytes — what the planner compares against device
+        memory for streamed-vs-resident placement.  CSR: indices + values +
+        indptr + labels; dense: the row matrix."""
+        if self.fmt == "csr":
+            return (self.nnz * (4 + 4)          # int32 indices + f32 values
+                    + (self.rows + 1) * 8       # int64 indptr
+                    + self.rows * 4)            # f32 labels
+        return self.rows * self.row_dim * np.dtype(self.dtype).itemsize
+
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
         if self.fmt == "dense":

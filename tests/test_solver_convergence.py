@@ -1,19 +1,35 @@
 """Theorem 1 validation: linear convergence in expectation to an O(alpha)
-floor for MBSGD (and the other solvers) under RS, CS and SS sampling."""
+floor for MBSGD (and the other solvers) under RS, CS and SS sampling.
+
+Runs go through the unified ExperimentSpec → plan → execute API (in-memory
+arrays lower to the device-resident epoch backend); the solver entry points
+themselves are internal backends now."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (ERMProblem, SolverConfig, run, samplers, solvers,
-                        synth_classification)
+from repro.api import DataSource, ExperimentSpec, execute, plan
+from repro.core import ERMProblem, samplers, solvers, synth_classification
+
+REG = 1e-2
+
+
+def _run(X, y, *, solver, scheme, step_size, epochs, batch_size=128,
+         step_mode="constant"):
+    spec = ExperimentSpec(data=DataSource.arrays(X, y), loss="logistic",
+                          reg=REG, solver=solver, scheme=scheme,
+                          step_mode=step_mode, step_size=step_size,
+                          batch_size=batch_size, epochs=epochs)
+    res = execute(plan(spec))
+    return res.w, res.history
 
 
 @pytest.fixture(scope="module")
 def problem():
     key = jax.random.PRNGKey(42)
     X, y, _ = synth_classification(key, l=2048, n=24, separation=2.0)
-    prob = ERMProblem(loss="logistic", reg=1e-2)
+    prob = ERMProblem(loss="logistic", reg=REG)
     L = float(prob.lipschitz(X))
     # tight reference optimum
     w = jnp.zeros(24)
@@ -27,9 +43,8 @@ def problem():
 @pytest.mark.parametrize("solver", solvers.SOLVERS)
 def test_linear_convergence_all_solvers_all_schemes(problem, scheme, solver):
     X, y, prob, L, pstar = problem
-    cfg = SolverConfig(solver=solver, step_mode="constant", step_size=1.0 / L)
-    w0 = jnp.zeros(X.shape[1])
-    _, hist = run(prob, cfg, scheme, X, y, w0, batch_size=128, epochs=12)
+    _, hist = _run(X, y, solver=solver, scheme=scheme, step_size=1.0 / L,
+                   epochs=12)
     gaps = np.asarray(hist) - pstar
     assert gaps[-1] < 0.5 * gaps[0], f"{solver}/{scheme}: no progress"
     assert gaps[-1] < 0.05, f"{solver}/{scheme}: gap {gaps[-1]}"
@@ -40,13 +55,10 @@ def test_linear_convergence_all_solvers_all_schemes(problem, scheme, solver):
 def test_theorem1_error_floor_scales_with_alpha(problem):
     """Halving alpha should roughly halve the asymptotic floor (Thm 1)."""
     X, y, prob, L, pstar = problem
-    w0 = jnp.zeros(X.shape[1])
     floors = []
     for alpha in (1.0 / L, 0.5 / L):
-        cfg = SolverConfig(solver="mbsgd", step_mode="constant",
-                           step_size=alpha)
-        _, hist = run(prob, cfg, samplers.SYSTEMATIC, X, y, w0,
-                      batch_size=64, epochs=40)
+        _, hist = _run(X, y, solver="mbsgd", scheme=samplers.SYSTEMATIC,
+                       step_size=alpha, batch_size=64, epochs=40)
         floors.append(float(hist[-1]) - pstar)
     assert floors[1] < floors[0] * 0.75
 
@@ -58,12 +70,10 @@ def test_rate_bound_formula():
 
 def test_line_search_not_worse_than_constant(problem):
     X, y, prob, L, pstar = problem
-    w0 = jnp.zeros(X.shape[1])
     out = {}
     for mode, step in (("constant", 1.0 / L), ("line_search", 1.0)):
-        cfg = SolverConfig(solver="mbsgd", step_mode=mode, step_size=step)
-        _, hist = run(prob, cfg, samplers.SYSTEMATIC, X, y, w0,
-                      batch_size=128, epochs=10)
+        _, hist = _run(X, y, solver="mbsgd", scheme=samplers.SYSTEMATIC,
+                       step_mode=mode, step_size=step, epochs=10)
         out[mode] = float(hist[-1]) - pstar
     assert out["line_search"] <= out["constant"] * 1.5
 
@@ -71,12 +81,10 @@ def test_line_search_not_worse_than_constant(problem):
 def test_schemes_reach_same_objective(problem):
     """Paper Tables 2-4: objective values agree to several decimals."""
     X, y, prob, L, pstar = problem
-    w0 = jnp.zeros(X.shape[1])
     finals = {}
     for scheme in samplers.SCHEMES:
-        cfg = SolverConfig(solver="saga", step_mode="constant",
-                           step_size=1.0 / L)
-        _, hist = run(prob, cfg, scheme, X, y, w0, batch_size=128, epochs=15)
+        _, hist = _run(X, y, solver="saga", scheme=scheme,
+                       step_size=1.0 / L, epochs=15)
         finals[scheme] = float(hist[-1])
     vals = list(finals.values())
     assert max(vals) - min(vals) < 5e-3, finals
@@ -84,12 +92,9 @@ def test_schemes_reach_same_objective(problem):
 
 def test_svrg_variance_reduction_beats_mbsgd(problem):
     X, y, prob, L, pstar = problem
-    w0 = jnp.zeros(X.shape[1])
     gaps = {}
     for solver in ("mbsgd", "svrg"):
-        cfg = SolverConfig(solver=solver, step_mode="constant",
-                           step_size=1.0 / L)
-        _, hist = run(prob, cfg, samplers.SYSTEMATIC, X, y, w0,
-                      batch_size=64, epochs=25)
+        _, hist = _run(X, y, solver=solver, scheme=samplers.SYSTEMATIC,
+                       step_size=1.0 / L, batch_size=64, epochs=25)
         gaps[solver] = float(hist[-1]) - pstar
     assert gaps["svrg"] <= gaps["mbsgd"] * 1.05
