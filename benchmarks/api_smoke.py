@@ -1,12 +1,14 @@
 """CI api-smoke: one tiny ExperimentSpec end-to-end per execution backend.
 
-Exercises the three distinct execution paths the planner can select —
+Exercises the distinct execution paths the planner can select —
 streamed-eager (dense corpus, host-driven chunked engine), resident-fused
 (dense corpus staged once, fused Pallas kernels forced so the cell runs
-off-TPU too), and sparse-csr (CSR corpus through the sparse chunked
-engine) — asserting the planner picked the expected backend and the run
-produced a finite objective, then writes each ``RunResult`` JSON so CI can
-upload them as artifacts.
+off-TPU too) under BOTH step rules (constant, and vectorized line search
+on the fused margin kernels — the cell the planner used to reject), and
+sparse-csr (CSR corpus through the sparse chunked engine) — asserting the
+planner picked the expected backend and the run produced a finite
+objective, then writes each ``RunResult`` JSON so CI can upload them as
+artifacts.
 
   PYTHONPATH=src python benchmarks/api_smoke.py --out /tmp/api_smoke
 """
@@ -32,27 +34,32 @@ def build_cells(out_dir: Path):
                                            density=0.02)
     base = dict(batch_size=128, epochs=2)
     return [
-        (STREAMED_EAGER,
+        ("streamed-eager", STREAMED_EAGER,
          ExperimentSpec(data=DataSource.corpus(dense), placement=STREAMED,
                         **base)),
-        (RESIDENT_FUSED,
+        ("resident-fused", RESIDENT_FUSED,
          ExperimentSpec(data=DataSource.corpus(dense), placement=RESIDENT,
                         kernel=FUSED, **base)),
-        (SPARSE_CSR,
+        ("resident-fused-ls", RESIDENT_FUSED,
+         ExperimentSpec(data=DataSource.corpus(dense), placement=RESIDENT,
+                        kernel=FUSED, step_mode="line_search", **base)),
+        ("sparse-csr", SPARSE_CSR,
          ExperimentSpec(data=DataSource.corpus(csr), **base)),
     ]
 
 
 def main(out_dir: Path) -> None:
     out_dir.mkdir(parents=True, exist_ok=True)
-    for want, spec in build_cells(out_dir):
+    for name, want, spec in build_cells(out_dir):
         p = plan(spec)
         assert p.backend == want, f"planned {p.backend}, wanted {want}"
+        if spec.step_mode == "line_search":
+            assert p.cfg.ls_mode == "vectorized", p.cfg
         res = execute(p)
-        assert math.isfinite(res.objective), (want, res.objective)
+        assert math.isfinite(res.objective), (name, res.objective)
         assert res.epochs_run == spec.epochs
-        path = res.save_json(out_dir / f"run_{want}.json")
-        print(f"{want}: objective={res.objective:.6f} "
+        path = res.save_json(out_dir / f"run_{name}.json")
+        print(f"{name}: objective={res.objective:.6f} "
               f"epoch_s={res.breakdown()['epoch_s']:.4f} -> {path}")
 
 

@@ -34,12 +34,19 @@ from __future__ import annotations
 
 import argparse
 import json
+from functools import partial
 from pathlib import Path
 
 import jax
 
-from repro.api import (CONSTANT, DataSource, ExperimentSpec, LINE_SEARCH,
-                       RESIDENT, SOLVERS, STREAMED, execute, plan)
+from repro.api import (AUTO, CONSTANT, DataSource, ExperimentSpec,
+                       LINE_SEARCH, LS_MODES, RESIDENT, SEQUENTIAL, SOLVERS,
+                       STREAMED, VECTORIZED, execute, plan)
+
+# --ls-mode both: time BOTH ls rules per LS cell, interleaved, and report
+# the vectorized row with the sequential baseline alongside — the only
+# comparison that survives a noisy shared machine (see benchmarks/README)
+BOTH = "both"
 from repro.core import samplers
 from repro.data import dataset, sparse
 
@@ -64,12 +71,15 @@ def _annotate_vs_rs(r, times, access):
 def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
             batch: int, epochs: int, reg: float = 1e-4,
             chunk: int | None = None, prefetch: int = 2,
-            resident: bool = False):
+            resident: bool = False, ls_mode: str = AUTO):
     """Train and time one (solver, step rule, scheme) cell through
-    plan()/execute(); returns the BENCH_erm result-dict schema."""
+    plan()/execute(); returns the BENCH_erm result-dict schema.  LS cells
+    carry the resolved ``ls_mode`` column (``vectorized`` trial-ladder
+    sweep by default; ``--ls-mode sequential`` re-times the old
+    per-batch backtracking ``while_loop`` baseline)."""
     spec = ExperimentSpec(
         data=DataSource.corpus(corpus), loss="logistic", reg=reg,
-        solver=solver, scheme=scheme, step_mode=step_mode,
+        solver=solver, scheme=scheme, step_mode=step_mode, ls_mode=ls_mode,
         batch_size=batch, epochs=epochs, chunk=chunk, prefetch=prefetch,
         placement=RESIDENT if resident else STREAMED,
         record_objective=False)
@@ -82,6 +92,8 @@ def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
         "epochs": epochs, "chunk": p.chunk, "backend": p.backend,
         **res.breakdown(),
     }
+    if step_mode == LINE_SEARCH:
+        r["ls_mode"] = p.cfg.ls_mode
     if resident:
         r["resident"] = True
     return r
@@ -127,7 +139,8 @@ def _derived_csv(r) -> str:
 
 def main(rows=100_000, features=64, batch=500, epochs=3,
          solvers_=SOLVERS, corpus_dir=Path("artifacts/bench"),
-         chunk=None, json_out=None, resident=False):
+         chunk=None, json_out=None, resident=False, ls_mode=AUTO,
+         repeats=1):
     corpus_dir.mkdir(parents=True, exist_ok=True)
     corpus = corpus_dir / f"erm_{rows}x{features}.bin"
     if not corpus.exists():
@@ -137,9 +150,34 @@ def main(rows=100_000, features=64, batch=500, epochs=3,
         for step_mode in (CONSTANT, LINE_SEARCH):
             times, access = {}, {}
             for scheme in samplers.SCHEMES:
-                r = run_one(corpus, solver, step_mode, scheme,
-                            batch=batch, epochs=epochs, chunk=chunk,
-                            resident=resident)
+                cell = partial(run_one, corpus, solver, step_mode, scheme,
+                               batch=batch, epochs=epochs, chunk=chunk,
+                               resident=resident)
+                if step_mode == LINE_SEARCH and ls_mode == BOTH:
+                    # interleave the two rules within each repeat so the
+                    # comparison is time-local (shared machines drift by
+                    # 2x between runs minutes apart), keep the min epoch
+                    # per rule, report the vectorized row with the
+                    # sequential baseline alongside
+                    best = {}
+                    for _ in range(repeats):
+                        for m in (SEQUENTIAL, VECTORIZED):
+                            rr = cell(ls_mode=m)
+                            if (m not in best
+                                    or rr["epoch_s"] < best[m]["epoch_s"]):
+                                best[m] = rr
+                    r = best[VECTORIZED]
+                    r["sequential_epoch_s"] = best[SEQUENTIAL]["epoch_s"]
+                    r["ls_speedup_vs_sequential"] = (
+                        best[SEQUENTIAL]["epoch_s"] / r["epoch_s"])
+                else:
+                    r = None
+                    # constant cells under --ls-mode both: no rule to A/B
+                    mode = AUTO if ls_mode == BOTH else ls_mode
+                    for _ in range(repeats):
+                        rr = cell(ls_mode=mode)
+                        if r is None or rr["epoch_s"] < r["epoch_s"]:
+                            r = rr
                 _annotate_vs_rs(r, times, access)
                 results.append(r)
                 out.append((r["name"], r["epoch_s"] * 1e6, _derived_csv(r)))
@@ -147,6 +185,9 @@ def main(rows=100_000, features=64, batch=500, epochs=3,
         payload = {
             "meta": {"schema": 1, "rows": rows, "features": features,
                      "batch": batch, "epochs": epochs, "resident": resident,
+                     "ls_mode": (ls_mode if ls_mode != AUTO
+                                 else "vectorized"),
+                     "repeats": repeats,
                      "backend": jax.default_backend(),
                      "unit": "seconds per epoch"},
             "results": results,
@@ -218,6 +259,16 @@ if __name__ == "__main__":
     ap.add_argument("--resident", action="store_true",
                     help="fused host mode: stage the corpus on device once "
                          "and run epochs in-graph (dense only)")
+    ap.add_argument("--ls-mode", choices=(AUTO, BOTH) + LS_MODES,
+                    default=AUTO,
+                    help="line-search cells: vectorized trial-ladder sweep "
+                         "(default), the sequential backtracking while_loop "
+                         "baseline, or 'both' — time the two interleaved "
+                         "and record the sequential baseline next to the "
+                         "vectorized row")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="measurements per cell; the minimal-epoch_s run "
+                         "is kept (noise floor on shared machines)")
     ap.add_argument("--json-out", type=Path, default=None,
                     help=f"write the breakdown JSON here; opt-in so ad-hoc "
                          f"runs don't clobber the committed {DEFAULT_JSON.name}"
@@ -236,6 +287,7 @@ if __name__ == "__main__":
                     if s)
         rows_out = main(a.rows, a.features or 64, a.batch, a.epochs,
                         solvers_=sel, chunk=a.chunk, json_out=a.json_out,
-                        resident=a.resident)
+                        resident=a.resident, ls_mode=a.ls_mode,
+                        repeats=a.repeats)
     for name, us, derived in rows_out:
         print(f"{name},{us:.2f},{derived}")

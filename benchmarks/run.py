@@ -1,4 +1,5 @@
-"""Benchmark harness: one function per paper table/figure + system benches.
+"""Benchmark harness: one function per paper table/figure + system benches,
+plus the budgeted sweep driver over the spec surface.
 
   erm_timing       paper Tables 2-4 (training time + objective, 5 solvers x
                    2 step rules x 3 samplings, memmap-streamed)
@@ -9,6 +10,14 @@
 
 Prints ``name,us_per_call,derived`` CSV. Full-scale knobs:
   python -m benchmarks.erm_timing --rows 2000000 --epochs 30
+
+``python -m benchmarks.run sweep`` runs :func:`run_sweep` — a budgeted,
+``RunResult``-resumable grid driver (lifted from ``examples/erm_sweep.py``'s
+grid loop): cells advance round-robin a few epochs at a time via
+``execute(plan, resume=prev)``, so a wall-clock budget cuts the grid
+fairly mid-flight and every partial cell remains resumable; the demo grid
+is the constant vs line-search axis.  ``--json-out`` emits a BENCH-style
+JSON per grid.
 """
 from __future__ import annotations
 
@@ -51,6 +60,132 @@ def _kernel_rows():
 SECTIONS = []
 
 
+# ---------------------------------------------------------------------------
+# budgeted, resumable sweep over a grid of ExperimentSpecs
+# ---------------------------------------------------------------------------
+
+def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
+              log=print):
+    """Drive a grid of ``ExperimentSpec``s under a wall-clock budget.
+
+    Cells advance ROUND-ROBIN, ``round_epochs`` at a time, resuming each
+    cell from its own previous ``RunResult`` (``execute(plan,
+    resume=prev)`` — same batch schedule an uninterrupted run would use).
+    When ``budget_s`` runs out mid-grid every cell keeps whatever epochs it
+    finished and stays resumable; with no budget the sweep runs every cell
+    to its spec's epoch budget.  Returns ``[(spec, RunResult), ...]`` in
+    grid order (cells that never got a turn carry ``None``).
+    """
+    from repro.api import execute, plan
+
+    cells = [{"spec": s, "plan": plan(s), "result": None} for s in grid]
+    t0 = time.perf_counter()
+    exhausted = False
+    progressed = True
+    while progressed and not exhausted:
+        progressed = False
+        for c in cells:
+            done = c["result"].epochs_done if c["result"] else 0
+            remaining = c["spec"].epochs - done
+            if remaining <= 0:
+                continue
+            if budget_s is not None and time.perf_counter() - t0 >= budget_s:
+                exhausted = True
+                break
+            c["result"] = execute(c["plan"], resume=c["result"],
+                                  epochs=min(round_epochs, remaining))
+            progressed = True
+    if exhausted:
+        log(f"# budget {budget_s:.0f}s exhausted after "
+            f"{time.perf_counter() - t0:.1f}s")
+
+    results = []
+    seen = {}
+    for c in cells:
+        spec, res = c["spec"], c["result"]
+        name = f"sweep_{spec.solver}_{spec.step_mode}_{spec.scheme}"
+        # grids may vary on axes the name doesn't carry (batch size, reg,
+        # ls_mode, ...) — disambiguate collisions instead of emitting
+        # duplicate row names
+        if name in seen:
+            seen[name] += 1
+            name = f"{name}#{seen[name]}"
+        else:
+            seen[name] = 0
+        if res is not None:
+            b = res.breakdown()
+            row = {"name": name, "solver": spec.solver,
+                   "step_mode": spec.step_mode,
+                   "ls_mode": res.plan.cfg.ls_mode
+                              if spec.step_mode == "line_search" else None,
+                   "scheme": spec.scheme, "backend": res.plan.backend,
+                   "epochs_done": res.epochs_done,
+                   "epochs_budget": spec.epochs, **b}
+            log(f"{name},{b['epoch_s'] * 1e6:.2f},"
+                f"objective={res.objective:.10f};"
+                f"epochs={res.epochs_done}/{spec.epochs};"
+                f"backend={res.plan.backend}")
+        else:
+            row = {"name": name, "solver": spec.solver,
+                   "step_mode": spec.step_mode, "scheme": spec.scheme,
+                   "epochs_done": 0, "epochs_budget": spec.epochs}
+            log(f"{name},,epochs=0/{spec.epochs} (budget ran out)")
+        results.append(row)
+
+    if json_out:
+        import json as jsonmod
+        from pathlib import Path
+        import jax
+        payload = {"meta": {"schema": 1, "budget_s": budget_s,
+                            "round_epochs": round_epochs,
+                            "backend": jax.default_backend(),
+                            "unit": "seconds per epoch"},
+                   "results": results}
+        Path(json_out).write_text(jsonmod.dumps(payload, indent=2) + "\n")
+    return [(c["spec"], c["result"]) for c in cells]
+
+
+def demo_sweep_grid(rows=8192, features=32, epochs=6):
+    """The demo grid: constant vs (vectorized) line-search axis across
+    three solvers on in-memory synthetic data — the step-rule comparison
+    the paper's tables make, as a sweep."""
+    import dataclasses
+    import itertools
+
+    import jax as _jax
+    from repro.api import DataSource, ExperimentSpec
+    from repro.core import synth_classification
+
+    X, y, _ = synth_classification(_jax.random.PRNGKey(0), rows, features,
+                                   separation=2.0)
+    base = ExperimentSpec(data=DataSource.arrays(X, y), loss="logistic",
+                          reg=1e-3, batch_size=256, epochs=epochs)
+    return [dataclasses.replace(base, solver=solver, step_mode=step_mode,
+                                step_size=1.0 if step_mode == "line_search"
+                                else None)
+            for solver, step_mode in itertools.product(
+                ("mbsgd", "svrg", "saga"), ("constant", "line_search"))]
+
+
+def sweep_main(argv) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(prog="benchmarks.run sweep")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="wall-clock budget; cells stay resumable when it "
+                         "runs out mid-grid")
+    ap.add_argument("--round-epochs", type=int, default=1,
+                    help="epochs granted per cell per round-robin turn")
+    ap.add_argument("--rows", type=int, default=8192)
+    ap.add_argument("--epochs", type=int, default=6,
+                    help="epoch budget per cell")
+    ap.add_argument("--json-out", type=str, default=None)
+    a = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run_sweep(demo_sweep_grid(rows=a.rows, epochs=a.epochs),
+              budget_s=a.budget_s, round_epochs=a.round_epochs,
+              json_out=a.json_out)
+
+
 def main() -> None:
     from benchmarks import access_time, erm_convergence, erm_timing, roofline
 
@@ -76,4 +211,7 @@ def main() -> None:
 
 
 if __name__ == '__main__':
-    main()
+    if len(sys.argv) > 1 and sys.argv[1] == "sweep":
+        sweep_main(sys.argv[2:])
+    else:
+        main()

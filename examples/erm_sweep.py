@@ -7,7 +7,13 @@ Each cell reports which backend the planner selected, the per-epoch wall
 time, and the final objective, and every result is resumable
 (``execute(plan, resume=result)``) if a cell deserves more epochs.
 
+This file is the didactic seed; the production driver grown from it is
+``benchmarks/run.py sweep`` (``benchmarks.run.run_sweep``): round-robin
+epoch granting under a wall-clock budget, every cell resumable mid-grid,
+BENCH-style JSON per grid.
+
   PYTHONPATH=src python examples/erm_sweep.py
+  PYTHONPATH=src python -m benchmarks.run sweep --budget-s 60
 """
 import dataclasses
 import itertools

@@ -21,6 +21,7 @@ from .core.experiment import (  # noqa: F401
     execute, plan, run_experiment)
 from .core.samplers import CYCLIC, RANDOM, SCHEMES, SYSTEMATIC  # noqa: F401
 from .core.solvers import CONSTANT, LINE_SEARCH, SOLVERS  # noqa: F401
+from .core.step_rules import LS_MODES, SEQUENTIAL, VECTORIZED  # noqa: F401
 
 __all__ = [
     "ARRAYS", "AUTO", "BACKENDS", "CSR", "DENSE", "EAGER", "FUSED",
@@ -28,6 +29,7 @@ __all__ = [
     "STREAMED", "STREAMED_EAGER",
     "CYCLIC", "RANDOM", "SCHEMES", "SYSTEMATIC",
     "CONSTANT", "LINE_SEARCH", "SOLVERS",
+    "LS_MODES", "SEQUENTIAL", "VECTORIZED",
     "DataSource", "ExecutionPlan", "ExperimentSpec", "PlanError",
     "RunResult", "execute", "plan", "run_experiment",
 ]

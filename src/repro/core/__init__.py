@@ -7,9 +7,11 @@ run it with ``execute()``.  The solver entry points in
 :mod:`repro.core.solvers` are internal backends the planner selects and are
 no longer exported here.
 """
-from . import access_model, erm, samplers, solvers  # noqa: F401
+from . import access_model, erm, samplers, solvers, step_rules  # noqa: F401
 from .erm import ERMProblem, synth_classification  # noqa: F401
 from .samplers import (CYCLIC, RANDOM, SCHEMES, SYSTEMATIC,  # noqa: F401
                        SamplerState, epoch_indices, make_sampler, next_batch)
 from .solvers import (MBSGD, SAAG2, SAG, SAGA, SOLVERS, SVRG,  # noqa: F401
                       SolverConfig)
+from .step_rules import (BacktrackingLS, ConstantStep,  # noqa: F401
+                         LS_MODES, SEQUENTIAL, VECTORIZED, VectorizedLS)

@@ -55,11 +55,17 @@ class ERMProblem:
         return jax.grad(self.objective)(w, X, y)
 
     # ---- mini-batch subproblem (eq. (3)) --------------------------------
+    def mean_margin_loss(self, z: jax.Array, yb: jax.Array) -> jax.Array:
+        """Mean per-example loss from precomputed margins ``z = Xb @ w``.
+
+        The step-rule subsystem composes trial objectives from margins
+        (``z(w - a v) = z(w) - a z(v)``), so this is the loss surface the
+        vectorized line search and the fused margin kernels share."""
+        return jnp.mean(_margin_losses(self.loss)(z, yb))
+
     def data_objective(self, w: jax.Array, Xb: jax.Array, yb: jax.Array) -> jax.Array:
         """Loss term only (no regularizer) — SAAG-II treats the reg exactly."""
-        z = Xb @ w
-        per = _margin_losses(self.loss)(z, yb)
-        return jnp.mean(per)
+        return self.mean_margin_loss(Xb @ w, yb)
 
     def batch_objective(self, w: jax.Array, Xb: jax.Array, yb: jax.Array) -> jax.Array:
         return self.data_objective(w, Xb, yb) + 0.5 * self.reg * jnp.dot(w, w)

@@ -51,6 +51,7 @@ from .erm import ERMProblem, LOGISTIC, SMOOTH_HINGE, SQUARE
 from .solvers import (CONSTANT, LINE_SEARCH, SOLVERS, SolverConfig,
                       SolverState, epoch_begin, init_state, make_epoch_fn,
                       make_resident_epoch_fn, streaming_full_grad)
+from .step_rules import LS_MODES, VECTORIZED, validate_ls
 
 LOSSES = (LOGISTIC, SQUARE, SMOOTH_HINGE)
 
@@ -138,6 +139,11 @@ class ExperimentSpec:
     scheme: str = samplers.SYSTEMATIC
     step_mode: str = CONSTANT
     step_size: Optional[float] = None   # None → 1/L (constant) or 1.0 (LS)
+    # line-search hyperparameters (step_mode="line_search")
+    ls_mode: str = AUTO                 # AUTO | SEQUENTIAL | VECTORIZED
+    ls_shrink: float = 0.5              # backtracking factor rho, in (0, 1)
+    ls_c: float = 1e-4                  # Armijo constant, in (0, 1)
+    ls_max_iter: int = 25               # trial-ladder length
     # budget
     batch_size: int = 500
     epochs: int = 3
@@ -187,6 +193,15 @@ class ExecutionPlan:
     def density(self) -> float:
         return self.nnz / max(1, self.rows * self.features)
 
+    @property
+    def step_rule(self) -> str:
+        """The resolved step rule, e.g. ``constant`` or
+        ``line_search[vectorized]`` — the ``ls_mode`` axis the benchmark
+        records."""
+        if self.cfg.step_mode == LINE_SEARCH:
+            return f"{LINE_SEARCH}[{self.cfg.ls_mode}]"
+        return self.cfg.step_mode
+
     def describe(self) -> str:
         lines = [
             f"backend   : {self.backend}",
@@ -194,7 +209,7 @@ class ExecutionPlan:
             f"({self.corpus_bytes / 1e6:.1f} MB"
             + (f", nnz={self.nnz}, kmax={self.kmax}" if self.fmt == CSR
                else "") + ")",
-            f"method    : {self.cfg.solver}/{self.cfg.step_mode} under "
+            f"method    : {self.cfg.solver}/{self.step_rule} under "
             f"{self.spec.scheme} sampling, step={self.cfg.step_size:.3g}",
             f"epoch     : m={self.num_batches} batches of "
             f"{self.spec.batch_size}, {self.chunk} per device call, "
@@ -237,9 +252,6 @@ def _fused_support(spec: ExperimentSpec, probe: _Probe) -> Tuple[bool, str]:
     if probe.fmt == CSR:
         return False, ("fused kernels are dense-only; CSR corpora keep the "
                        "sparse chunked engine")
-    if spec.step_mode != CONSTANT:
-        return False, ("line search evaluates trial objectives on the "
-                       "materialized batch; fused path is constant-step only")
     try:
         from ..kernels import fused_erm  # pallas availability
     except ImportError:
@@ -275,6 +287,22 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
     if spec.step_mode not in (CONSTANT, LINE_SEARCH):
         raise PlanError(f"unknown step_mode {spec.step_mode!r}; want "
                         f"{(CONSTANT, LINE_SEARCH)}")
+    if spec.ls_mode not in (AUTO,) + LS_MODES:
+        raise PlanError(f"ls_mode must be auto/sequential/vectorized, got "
+                        f"{spec.ls_mode!r}")
+    # line-search hyperparameters that cannot terminate or cannot decrease
+    # die HERE, not as an endless backtracking loop at run time — one
+    # validator (step_rules.validate_ls) owns the rules so plan() and
+    # direct SolverConfig users can never drift apart
+    if spec.step_size is not None and not spec.step_size > 0:
+        raise PlanError(f"step_size must be positive (got "
+                        f"{spec.step_size!r}) — it is the constant step or "
+                        f"the line search's initial trial")
+    try:
+        validate_ls(1.0 if spec.step_size is None else spec.step_size,
+                    spec.ls_shrink, spec.ls_c, spec.ls_max_iter)
+    except ValueError as e:
+        raise PlanError(str(e)) from e
     if spec.loss not in LOSSES:
         raise PlanError(f"unknown loss {spec.loss!r}; want one of {LOSSES}")
     if spec.placement not in (AUTO, STREAMED, RESIDENT):
@@ -349,8 +377,8 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
                    "pass kernel='fused' to force")
     else:
         kernel = FUSED
-        why.append("resident + constant step + supported loss → fused "
-                   "kernels by default")
+        why.append("resident + supported loss → fused kernels by default "
+                   "(line search runs on the fused margin kernels)")
 
     # ---- chunk shape (streamed) and solver config ------------------------
     m = samplers.num_batches(probe.rows, spec.batch_size)
@@ -374,8 +402,18 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
 
     step_size = (spec.step_size if spec.step_size is not None
                  else _auto_step_size(spec, probe))
+    ls_mode = VECTORIZED if spec.ls_mode == AUTO else spec.ls_mode
+    if spec.step_mode == LINE_SEARCH:
+        if spec.ls_mode == AUTO:
+            why.append("line search lowers to the vectorized trial-ladder "
+                       "sweep (ls_mode='sequential' keeps the backtracking "
+                       "while_loop reference)")
+        else:
+            why.append(f"ls_mode {ls_mode!r} forced by spec")
     cfg = SolverConfig(solver=spec.solver, step_mode=spec.step_mode,
-                       step_size=step_size, use_fused=(kernel == FUSED),
+                       step_size=step_size, ls_shrink=spec.ls_shrink,
+                       ls_c=spec.ls_c, ls_max_iter=spec.ls_max_iter,
+                       ls_mode=ls_mode, use_fused=(kernel == FUSED),
                        sparse=(probe.fmt == CSR))
 
     if probe.fmt == CSR:
@@ -467,6 +505,8 @@ class RunResult:
             "plan": {"placement": p.placement, "kernel": p.kernel,
                      "format": p.fmt, "solver": p.cfg.solver,
                      "step_mode": p.cfg.step_mode,
+                     "ls_mode": (p.cfg.ls_mode
+                                 if p.cfg.step_mode == LINE_SEARCH else None),
                      "step_size": p.cfg.step_size, "scheme": p.spec.scheme,
                      "batch_size": p.spec.batch_size, "rows": p.rows,
                      "features": p.features, "num_batches": p.num_batches,

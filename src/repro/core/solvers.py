@@ -34,6 +34,13 @@ Set ``SolverConfig(use_fused=True)`` to route device-resident gradients
 through the fused Pallas kernels (``repro.kernels.fused_erm``): the sampled
 rows are DMA'd straight into VMEM and the batch never materializes in HBM.
 The reference gather path stays the default and is the parity oracle.
+
+Step determination is delegated to :mod:`repro.core.step_rules`
+(ConstantStep / BacktrackingLS / VectorizedLS): every solver builds a
+``BatchProbe`` for its batch representation (dense, padded-ELL, or fused
+margins kernels) and asks the config's rule to pick the step — which is
+what lets line search run on EVERY backend, including the fused
+device-resident path.
 """
 from __future__ import annotations
 
@@ -43,12 +50,12 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import samplers
+from . import samplers, step_rules
 from .erm import ERMProblem, gather_batch
+from .step_rules import CONSTANT, LINE_SEARCH, SEQUENTIAL, VECTORIZED  # noqa: F401 — re-exported vocabulary
 
 MBSGD, SAG, SAGA, SVRG, SAAG2 = "mbsgd", "sag", "saga", "svrg", "saag2"
 SOLVERS = (MBSGD, SAG, SAGA, SVRG, SAAG2)
-CONSTANT, LINE_SEARCH = "constant", "line_search"
 
 
 class SolverConfig(NamedTuple):
@@ -58,8 +65,9 @@ class SolverConfig(NamedTuple):
     ls_shrink: float = 0.5        # backtracking factor rho
     ls_c: float = 1e-4            # Armijo constant
     ls_max_iter: int = 25
-    use_fused: bool = False       # fused gather+grad Pallas kernels (CONSTANT only)
+    use_fused: bool = False       # fused gather+grad Pallas kernels
     sparse: bool = False          # CSR corpus: padded-ELL batches, no densify
+    ls_mode: str = VECTORIZED     # trial-ladder sweep | "sequential" ref
 
 
 class SolverState(NamedTuple):
@@ -93,51 +101,15 @@ def init_state(solver: str, w0: jax.Array, num_batches: int) -> SolverState:
 
 
 # ---------------------------------------------------------------------------
-# step size selection
+# step size selection — delegated to the repro.core.step_rules subsystem
 # ---------------------------------------------------------------------------
 
-def _armijo_obj(cfg: SolverConfig, obj: Callable[[jax.Array], jax.Array],
-                w: jax.Array, v: jax.Array, g: jax.Array) -> jax.Array:
-    """Backtracking line search on the MINI-BATCH objective only (paper §4.1:
-    full-dataset line search 'could hurt the convergence ... by taking huge
-    time'). Direction is -v; sufficient decrease wrt <g, v>.  ``obj`` is the
-    batch objective as a function of w — dense and sparse (ELL) batches
-    share this core."""
-    f0 = obj(w)
-    gv = jnp.dot(g, v)
-
-    def cond(carry):
-        alpha, it = carry
-        return (obj(w - alpha * v) > f0 - cfg.ls_c * alpha * gv) \
-            & (it < cfg.ls_max_iter)
-
-    def body(carry):
-        alpha, it = carry
-        return alpha * cfg.ls_shrink, it + 1
-
-    alpha0 = jnp.asarray(cfg.step_size, w.dtype)
-    alpha, _ = jax.lax.while_loop(cond, body, (alpha0, 0))
-    # If v is not a descent direction on this batch (<g, v> <= 0) the Armijo
-    # condition is vacuous and the loop would return the FULL initial step,
-    # which can diverge SAG/SAGA early when the gradient table is still
-    # cold.  Fall back to the smallest step the search could ever produce.
-    alpha_safe = alpha0 * cfg.ls_shrink ** cfg.ls_max_iter
-    return jnp.where(gv > 0, alpha, alpha_safe)
-
-
-def _armijo(problem: ERMProblem, cfg: SolverConfig, w: jax.Array, v: jax.Array,
-            g: jax.Array, Xb: jax.Array, yb: jax.Array) -> jax.Array:
-    """Dense-batch Armijo (thin wrapper over :func:`_armijo_obj`)."""
-    return _armijo_obj(cfg, lambda ww: problem.batch_objective(ww, Xb, yb),
-                       w, v, g)
-
-
-def _pick_step(cfg, obj, w, v, g) -> jax.Array:
-    if cfg.step_mode == CONSTANT:
-        return jnp.asarray(cfg.step_size, w.dtype)
-    if cfg.step_mode == LINE_SEARCH:
-        return _armijo_obj(cfg, obj, w, v, g)
-    raise ValueError(f"unknown step mode {cfg.step_mode!r}")
+def _step_rule(cfg: SolverConfig) -> step_rules.StepRule:
+    """Resolve the config's step rule (ConstantStep / BacktrackingLS /
+    VectorizedLS) — every solver and every execution backend picks its step
+    through this one dispatch, with the batch presented as a
+    :class:`~repro.core.step_rules.BatchProbe`."""
+    return step_rules.from_config(cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -204,8 +176,8 @@ def batch_step(problem: ERMProblem, cfg: SolverConfig, state: SolverState,
     gd_snap = (problem.batch_grad_data(state.snapshot, Xb, yb)
                if _needs_snapshot(cfg.solver) else None)
     v, g, new_state = _solver_direction(problem, cfg, state, j, gd, gd_snap)
-    alpha = _pick_step(cfg, lambda ww: problem.batch_objective(ww, Xb, yb),
-                       w, v, g)
+    alpha = _step_rule(cfg).pick(step_rules.dense_probe(problem, Xb, yb),
+                                 w, v, g)
     return new_state._replace(w=w - alpha * v)
 
 
@@ -222,9 +194,8 @@ def sparse_batch_step(problem: ERMProblem, cfg: SolverConfig,
     gd_snap = (problem.ell_batch_grad_data(state.snapshot, cols, vals, yb)
                if _needs_snapshot(cfg.solver) else None)
     v, g, new_state = _solver_direction(problem, cfg, state, j, gd, gd_snap)
-    alpha = _pick_step(
-        cfg, lambda ww: problem.ell_batch_objective(ww, cols, vals, yb),
-        w, v, g)
+    alpha = _step_rule(cfg).pick(
+        step_rules.ell_probe(problem, cols, vals, yb), w, v, g)
     return new_state._replace(w=w - alpha * v)
 
 
@@ -236,9 +207,10 @@ def fused_batch_step(problem: ERMProblem, cfg: SolverConfig,
     """One solver update whose gradients come from the fused Pallas kernels.
 
     The mini-batch is described by ``start`` (CS/SS contiguous block) or
-    ``idx`` (RS rows) and never materializes in HBM.  Line search needs the
-    batch for trial objectives, so the fused path is CONSTANT-step only —
-    enforced in :func:`run`.
+    ``idx`` (RS rows) and never materializes in HBM.  Line search stays
+    device-resident too: trial objectives come from the fused margin
+    kernels through :func:`step_rules.fused_probe` (two margin sweeps per
+    vectorized ladder, one per trial for the sequential reference).
     """
     from ..kernels import fused_erm  # deferred: keep core import pallas-free
 
@@ -248,8 +220,11 @@ def fused_batch_step(problem: ERMProblem, cfg: SolverConfig,
     gd_snap = (fused_erm.fused_batch_grad_data(problem, X, y, state.snapshot,
                                                **kw)
                if _needs_snapshot(cfg.solver) else None)
-    v, _, new_state = _solver_direction(problem, cfg, state, j, gd, gd_snap)
-    alpha = jnp.asarray(cfg.step_size, state.w.dtype)
+    v, g, new_state = _solver_direction(problem, cfg, state, j, gd, gd_snap)
+    rule = _step_rule(cfg)
+    probe = (step_rules.fused_probe(problem, X, y, **kw)
+             if rule.needs_probe else None)
+    alpha = rule.pick(probe, state.w, v, g)
     return new_state._replace(w=state.w - alpha * v)
 
 
@@ -308,6 +283,10 @@ def _run_one_epoch(problem: ERMProblem, cfg: SolverConfig, scheme: str,
             Xb, yb = gather_batch(X, y, idx_mat[j])
         return batch_step(problem, cfg, st, Xb, yb, j), None
 
+    # NO unroll here, unlike make_epoch_fn: the resident loop is the
+    # ls-mode parity surface (tests pin seq == vec trajectories bit-exact),
+    # and unrolling one mode but not the other changes XLA fusion enough
+    # to shift shared arithmetic by ulps
     state, _ = jax.lax.scan(body, state, jnp.arange(m))
     return state
 
@@ -317,9 +296,6 @@ def run(problem: ERMProblem, cfg: SolverConfig, scheme: str, X: jax.Array,
         seed: int = 0, record_objective: bool = True,
         ) -> Tuple[jax.Array, jnp.ndarray]:
     """Run `epochs` epochs; returns (w, per-epoch objective history)."""
-    if cfg.use_fused and cfg.step_mode != CONSTANT:
-        raise ValueError("use_fused supports constant steps only: line search "
-                         "evaluates trial objectives on the materialized batch")
     if cfg.sparse:
         raise ValueError(
             "run() is the dense device-resident loop; CSR corpora go through "
@@ -398,10 +374,13 @@ def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig):
             "use_fused applies to the device-resident run(): the chunked "
             "host engine consumes staged batches, which are materialized "
             "by construction — there is nothing left to fuse")
-    # unrolling trims per-iteration loop overhead for the cheap
-    # constant-step body; line search has a while_loop per batch and
-    # unrolling it only bloats compile time
-    unroll = 8 if cfg.step_mode == CONSTANT else 1
+    # unrolling trims per-iteration loop overhead for cheap straight-line
+    # bodies — constant step AND the vectorized trial-ladder line search;
+    # only the sequential reference keeps a data-dependent while_loop per
+    # batch, where unrolling just bloats compile time
+    sequential_ls = (cfg.step_mode == LINE_SEARCH
+                     and cfg.ls_mode == SEQUENTIAL)
+    unroll = 1 if sequential_ls else 8
 
     if cfg.sparse:
         @partial(jax.jit, donate_argnums=(0,))
@@ -444,9 +423,6 @@ def make_resident_epoch_fn(problem: ERMProblem, cfg: SolverConfig,
         raise ValueError(
             "resident mode stages a dense (l, n) corpus; CSR corpora keep "
             "the host-driven sparse epoch engine")
-    if cfg.use_fused and cfg.step_mode != CONSTANT:
-        raise ValueError("use_fused supports constant steps only: line search "
-                         "evaluates trial objectives on the materialized batch")
     return partial(_run_one_epoch, problem, cfg, scheme, batch_size)
 
 

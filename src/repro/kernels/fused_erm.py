@@ -28,6 +28,13 @@ Semantics contract (tested in ``tests/test_fused_erm.py``):
 * rows: exactly the rows of ``idx`` (wrap-around indices from
   ``samplers.epoch_indices`` included), matching ``gather_batch``.
 
+Alongside the gradients, :func:`fused_margins_block` / :func:`fused_margins_rows`
+expose the margin pass ``z = Xb @ w`` stand-alone (phase 0 of the block
+kernel, the row dot of the rows kernel): this is the line-search
+trial-objective surface — ``repro.core.step_rules.fused_probe`` evaluates a
+whole Armijo trial ladder from two margin sweeps, keeping line search
+device-resident on the fused backends.
+
 ``interpret=None`` auto-selects interpreter mode off-TPU so CPU CI runs the
 same code path that a TPU compiles.
 """
@@ -216,6 +223,137 @@ def fused_grad_rows(X: jax.Array, y: jax.Array, w: jax.Array,
     )(idx.astype(jnp.int32), X.astype(jnp.float32),
       y.reshape(1, l).astype(jnp.float32), w.reshape(1, n).astype(jnp.float32))
     return g.reshape(n).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# batch margins: z = Xb @ w without materializing the batch — the line-search
+# trial-objective kernel (phase 0 of the gradient kernels, stand-alone)
+# ---------------------------------------------------------------------------
+
+def _block_margins_kernel(b: int, tn: int,
+                          start_ref, x_hbm, w_ref, z_ref, x_vmem, sems):
+    t = pl.program_id(0)   # feature tile
+    start = start_ref[0]
+    # same contiguous (b, tn) block DMA per tile as the gradient kernel's
+    # phase 0 — one descriptor per tile, batch never lands in HBM
+    dma = pltpu.make_async_copy(
+        x_hbm.at[pl.ds(start, b), pl.ds(t * tn, tn)], x_vmem, sems.at[0])
+    dma.start()
+
+    @pl.when(t == 0)
+    def _():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    dma.wait()
+    wt = w_ref[0, pl.ds(t * tn, tn)].reshape(tn, 1)
+    z_ref[...] += jnp.dot(x_vmem[...], wt,
+                          preferred_element_type=jnp.float32).reshape(1, b)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size", "interpret"))
+def fused_margins_block(X: jax.Array, w: jax.Array, start: jax.Array, *,
+                        batch_size: int,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Margins ``z = Xb @ w`` of the contiguous batch at row ``start``
+    (CS/SS), with the same ``min(start, l-b)`` clamping as
+    :func:`fused_grad_block`.  Returns (b,) float32."""
+    l, n = X.shape
+    b = batch_size
+    if b > l:
+        raise ValueError(f"batch_size {b} > rows {l}")
+    tn = _feature_tile(n)
+    start = jnp.clip(start.astype(jnp.int32), 0, l - b).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // tn,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),    # X stays in HBM
+                  pl.BlockSpec(memory_space=pltpu.VMEM)],  # w (1, n)
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        scratch_shapes=[pltpu.VMEM((b, tn), jnp.float32),
+                        pltpu.SemaphoreType.DMA((1,))],
+    )
+    z = pl.pallas_call(
+        functools.partial(_block_margins_kernel, b, tn),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, b), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(start, X.astype(jnp.float32), w.reshape(1, n).astype(jnp.float32))
+    return z.reshape(b).astype(w.dtype)
+
+
+def _rows_margins_kernel(idx_ref, x_ref, w_ref, z_ref):
+    i = pl.program_id(0)   # one sampled row per grid step
+    z_ref[0, i] = jnp.sum(x_ref[...] * w_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_margins_rows(X: jax.Array, w: jax.Array, idx: jax.Array, *,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Margins ``z_i = X[idx[i]] . w`` of a scattered batch (RS): a grid of
+    b steps, one (1, n) row DMA each, like :func:`fused_grad_rows`.
+    Returns (b,) float32."""
+    l, n = X.shape
+    b = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i, idx_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((1, n), lambda i, idx_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i, idx_ref: (0, 0)),
+    )
+    z = pl.pallas_call(
+        _rows_margins_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, b), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(idx.astype(jnp.int32), X.astype(jnp.float32),
+      w.reshape(1, n).astype(jnp.float32))
+    return z.reshape(b).astype(w.dtype)
+
+
+def fused_batch_margins(X, w, *, start=None, idx=None, batch_size=None,
+                        interpret=None):
+    """Margins of the sampled batch, device-resident end to end.
+
+    Pass exactly one of ``start`` (contiguous CS/SS block; needs
+    ``batch_size``) or ``idx`` (scattered RS rows).  This is what the
+    step-rule subsystem's ``fused_probe`` evaluates: a full trial-ladder
+    line search costs TWO margin sweeps (``z(w)``, ``z(v)``), not one
+    objective pass per trial step.
+    """
+    if (start is None) == (idx is None):
+        raise ValueError("pass exactly one of start= (CS/SS) or idx= (RS)")
+    if start is not None:
+        if batch_size is None:
+            raise ValueError("start= (CS/SS block) also requires batch_size=")
+        return fused_margins_block(X, w, start, batch_size=batch_size,
+                                   interpret=interpret)
+    return fused_margins_rows(X, w, idx, interpret=interpret)
+
+
+def fused_batch_labels(y, *, start=None, idx=None, batch_size=None):
+    """Labels of the sampled batch, with the SAME ``clip(start, 0, l-b)``
+    clamping / wrap-around ``take`` semantics as the margin and gradient
+    kernels — the one place that logic lives, so label extraction can
+    never drift from what the kernels actually read."""
+    if start is not None:
+        start_c = jnp.clip(start.astype(jnp.int32), 0,
+                           y.shape[0] - batch_size)
+        return jax.lax.dynamic_slice(y, (start_c,), (batch_size,))
+    return jnp.take(y, idx.astype(jnp.int32))
+
+
+def fused_batch_objective(problem: ERMProblem, X, y, w, *, start=None,
+                          idx=None, batch_size=None, interpret=None):
+    """Fused equivalent of ``problem.batch_objective(w, *gather(...))`` —
+    margins from the fused kernel, labels via a cheap O(b) slice/take."""
+    z = fused_batch_margins(X, w, start=start, idx=idx,
+                            batch_size=batch_size, interpret=interpret)
+    yb = fused_batch_labels(y, start=start, idx=idx, batch_size=batch_size)
+    return (problem.mean_margin_loss(z, yb)
+            + 0.5 * problem.reg * jnp.dot(w, w))
 
 
 # ---------------------------------------------------------------------------

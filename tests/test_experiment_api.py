@@ -109,11 +109,43 @@ def test_planner_auto_placement_respects_budget(dense_corpus):
     assert p.placement == STREAMED and p.backend == STREAMED_EAGER
 
 
-def test_planner_line_search_resident_falls_back_to_eager(dense_corpus):
+def test_planner_line_search_lowers_onto_fused_backend(dense_corpus):
+    """step='line_search' is no longer a fused-path conflict: forced fused
+    kernels plan RESIDENT_FUSED (trial objectives from the fused margin
+    kernels), auto resolves ls_mode to the vectorized trial-ladder sweep,
+    and the chosen rule is recorded on the plan/result."""
     p = plan(_spec(DataSource.corpus(dense_corpus), placement=RESIDENT,
-                   step_mode="line_search", step_size=1.0))
-    assert p.backend == RESIDENT_EAGER
-    assert any("line search" in w for w in p.why)
+                   kernel=FUSED, step_mode="line_search", step_size=1.0))
+    assert p.backend == RESIDENT_FUSED
+    assert p.cfg.ls_mode == "vectorized" and "[vectorized]" in p.step_rule
+    # auto kernel off-TPU still keeps eager (interpret-mode parity path),
+    # for the same reason as constant-step cells — not because of the rule
+    auto = plan(_spec(DataSource.corpus(dense_corpus), placement=RESIDENT,
+                      step_mode="line_search", step_size=1.0))
+    want = (RESIDENT_FUSED if jax.default_backend() == "tpu"
+            else RESIDENT_EAGER)
+    assert auto.backend == want
+
+
+def test_planner_records_requested_ls_mode(dense_corpus):
+    p = plan(_spec(DataSource.corpus(dense_corpus), step_mode="line_search",
+                   step_size=1.0, ls_mode="sequential"))
+    assert p.cfg.ls_mode == "sequential"
+    assert any("sequential" in w for w in p.why)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(ls_shrink=1.0), dict(ls_shrink=0.0), dict(ls_shrink=-0.5),
+    dict(step_size=0.0), dict(step_size=-1.0),
+    dict(ls_c=0.0), dict(ls_c=1.5), dict(ls_max_iter=0),
+    dict(ls_mode="turbo"),
+])
+def test_plan_rejects_bad_line_search_hyperparameters(dense_corpus, kw):
+    """Hyperparameters that cannot terminate or cannot decrease die at
+    plan time, not as an endless backtracking loop at run time."""
+    with pytest.raises(PlanError):
+        plan(_spec(DataSource.corpus(dense_corpus), step_mode="line_search",
+                   **{**dict(step_size=1.0), **kw}))
 
 
 def test_planner_resolves_auto_step_size(dense_corpus, csr_corpus):
@@ -146,12 +178,17 @@ def test_plan_rejects_sparse_and_fused_conflicts(csr_corpus, kw, match):
         plan(_spec(DataSource.corpus(csr_corpus), **kw))
 
 
-def test_plan_rejects_fused_line_search_dense(dense_corpus):
-    """The combo that used to silently fall back: line search on the fused
-    path dies at plan time with the reason, before anything executes."""
-    with pytest.raises(PlanError, match="line search"):
-        plan(_spec(DataSource.corpus(dense_corpus), placement=RESIDENT,
-                   kernel=FUSED, step_mode="line_search"))
+def test_fused_line_search_executes_and_matches_eager(dense_corpus):
+    """resident-fused runs line search end-to-end (interpret mode on CPU)
+    and agrees with resident-eager on the same plan inputs — the cell the
+    planner used to reject."""
+    src = DataSource.corpus(dense_corpus)
+    kw = dict(solver="saga", scheme="cyclic", epochs=2,
+              step_mode="line_search", step_size=1.0)
+    r_f = execute(plan(_spec(src, placement=RESIDENT, kernel=FUSED, **kw)))
+    r_e = execute(plan(_spec(src, placement=RESIDENT, kernel=EAGER, **kw)))
+    assert r_f.plan.backend == RESIDENT_FUSED
+    np.testing.assert_allclose(r_f.w, r_e.w, rtol=1e-5, atol=1e-6)
 
 
 def test_plan_rejects_fused_streamed(dense_corpus):

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import samplers, solvers
+from repro.core import samplers, solvers, step_rules
 from repro.core.erm import ERMProblem, gather_batch, slice_batch, synth_classification
 from repro.core.solvers import SolverConfig
 from repro.kernels.fused_erm import (LOSSES, fused_batch_grad,
@@ -121,12 +121,22 @@ def test_fused_run_matches_reference_run(data, solver, scheme):
                                rtol=1e-5, atol=1e-6)
 
 
-def test_fused_rejects_line_search(data):
+@pytest.mark.parametrize("scheme", samplers.SCHEMES)
+@pytest.mark.parametrize("ls_mode", [solvers.SEQUENTIAL, solvers.VECTORIZED])
+def test_fused_line_search_matches_eager(data, scheme, ls_mode):
+    """Line search on the fused path (trial objectives from the fused
+    margin kernels) == the eager gather path, both ls modes — the combo
+    that used to be rejected as constant-step only."""
     X, y, _ = data
-    cfg = SolverConfig(step_mode=solvers.LINE_SEARCH, use_fused=True)
-    with pytest.raises(ValueError, match="constant"):
-        solvers.run(ERMProblem(), cfg, samplers.CYCLIC, X, y,
-                    jnp.zeros(N_FEAT), batch_size=20, epochs=1)
+    cfg = SolverConfig(solver=solvers.SVRG, step_mode=solvers.LINE_SEARCH,
+                      step_size=1.0, ls_mode=ls_mode)
+    w0 = jnp.zeros(N_FEAT)
+    we, _ = solvers.run(ERMProblem(reg=1e-3), cfg, scheme, X, y, w0,
+                        batch_size=20, epochs=2)
+    wf, _ = solvers.run(ERMProblem(reg=1e-3), cfg._replace(use_fused=True),
+                        scheme, X, y, w0, batch_size=20, epochs=2)
+    np.testing.assert_allclose(np.asarray(we), np.asarray(wf),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_epoch_fn_rejects_use_fused():
@@ -186,18 +196,22 @@ def test_epoch_fn_donates_state(data):
 
 # ------------------------------------------------------- regressions ----
 
-def test_armijo_non_descent_falls_back_to_small_step(data):
+@pytest.mark.parametrize("rule_cls", [step_rules.BacktrackingLS,
+                                      step_rules.VectorizedLS])
+def test_armijo_non_descent_falls_back_to_small_step(data, rule_cls):
     """<g, v> <= 0 must NOT return the full initial step (divergence risk);
-    regression for the silent `return alpha0` fallback."""
+    regression for the silent `return alpha0` fallback — pinned for BOTH
+    line-search rules."""
     X, y, _ = data
     prob = ERMProblem(reg=1e-3)
-    cfg = SolverConfig(step_mode=solvers.LINE_SEARCH, step_size=1.0)
+    rule = rule_cls(step_size=1.0)
+    probe = step_rules.dense_probe(prob, X[:B], y[:B])
     w = jnp.ones(N_FEAT)
     g = jnp.ones(N_FEAT)
     v = -g                                     # ascent direction: <g, v> < 0
-    alpha = solvers._armijo(prob, cfg, w, v, g, X[:B], y[:B])
-    a_min = cfg.step_size * cfg.ls_shrink ** cfg.ls_max_iter
+    alpha = rule.pick(probe, w, v, g)
+    a_min = rule.step_size * rule.shrink ** rule.max_iter
     assert float(alpha) == pytest.approx(a_min)
     # descent direction still line-searches normally
-    alpha2 = solvers._armijo(prob, cfg, w, g, g, X[:B], y[:B])
+    alpha2 = rule.pick(probe, w, g, g)
     assert float(alpha2) > a_min

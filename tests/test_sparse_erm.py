@@ -17,6 +17,8 @@ from repro.kernels.fused_erm import LOSSES, fused_batch_grad_data
 from repro.kernels.sparse_erm import (CSRDevice, csr_to_device,
                                       sparse_batch_grad,
                                       sparse_batch_grad_data,
+                                      sparse_batch_margins,
+                                      sparse_batch_objective,
                                       sparse_grad_block, sparse_grad_rows)
 
 ROWS, FEATS, B = 57, 48, 10          # 57 % 10 != 0: clamped last block
@@ -104,6 +106,57 @@ def test_sparse_epoch_schedule_parity(dev, dense, w, loss, scheme):
                                         interpret=True)
             np.testing.assert_allclose(np.asarray(g), np.asarray(ref),
                                        rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["block", "rows"])
+def test_sparse_margins_match_densified(dev, dense, w, mode):
+    """CSR margin kernels (the line-search trial-objective pass) == dense
+    margins on densify(), block and rows, plus the composed objective."""
+    X, y = dense
+    prob = ERMProblem(loss="logistic", reg=1e-3)
+    if mode == "block":
+        kw = dict(start=jnp.asarray(20), batch_size=B)
+        Xb, yb = X[20:30], y[20:30]
+    else:
+        idx = jnp.asarray([5, 51, 0, 56, 7, 7, 30, 21, 2, 44], jnp.int32)
+        kw = dict(idx=idx)
+        Xb, yb = X[idx], y[idx]
+    z = sparse_batch_margins(dev, w, interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(Xb @ w),
+                               rtol=1e-5, atol=1e-6)
+    obj = sparse_batch_objective(prob, dev, w, interpret=True, **kw)
+    np.testing.assert_allclose(float(obj),
+                               float(prob.batch_objective(w, Xb, yb)),
+                               rtol=1e-5)
+
+
+def test_sparse_kernels_feature_tiled_parity(tmp_path):
+    """Feature counts above one VMEM tile (n > 1024 → tn < n) run the tiled
+    one-hot densify: gradients AND margins still match the densified
+    reference — the news20-scale VMEM follow-on."""
+    path = tmp_path / "wide.csr"
+    n_wide = 2048                       # _feature_tile -> 1024, 2 tiles
+    sparse.synth_sparse_classification(path, rows=80, features=n_wide,
+                                       density=0.01, seed=5)
+    csr = sparse.open_csr_corpus(path)
+    d = csr_to_device(csr, batch_size=16)
+    X, y = csr.densify()
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    ww = jax.random.normal(jax.random.PRNGKey(3), (n_wide,)) * 0.1
+    prob = ERMProblem(loss="logistic", reg=1e-3)
+    g = sparse_batch_grad_data(prob, d, ww, start=jnp.asarray(10),
+                               batch_size=16, interpret=True)
+    ref = prob.batch_grad_data(ww, X[10:26], y[10:26])
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    idx = jnp.asarray([0, 79, 7, 33, 7, 12, 60, 41], jnp.int32)
+    g2 = sparse_batch_grad_data(prob, d, ww, idx=idx, interpret=True)
+    ref2 = prob.batch_grad_data(ww, X[idx], y[idx])
+    np.testing.assert_allclose(np.asarray(g2), np.asarray(ref2),
+                               rtol=1e-5, atol=1e-6)
+    z = sparse_batch_margins(d, ww, idx=idx, interpret=True)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(X[idx] @ ww),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_sparse_grad_handles_empty_row(tmp_path, w):

@@ -1,0 +1,220 @@
+"""Step-rule subsystem tests.
+
+Three contracts:
+
+* RULE PARITY — :class:`VectorizedLS` (whole trial ladder in one batched
+  sweep) picks the same step as the sequential :class:`BacktrackingLS`
+  reference whenever the accepted step lies on the geometric trial ladder
+  — property-tested over random problems, then end-to-end across all five
+  solvers × RS/CS/SS where the whole trajectory must match bit-for-bit
+  (same rung ⇒ same alpha ⇒ same update);
+* PROBES — every batch representation (dense, padded-ELL CSR, fused
+  Pallas margins) presents the same ``BatchProbe`` surface and yields the
+  same trial objectives;
+* VALIDATION — hyperparameters that cannot terminate or cannot decrease
+  raise at rule construction (ValueError) and at plan time (PlanError,
+  covered in ``tests/test_experiment_api.py``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import samplers, solvers, step_rules
+from repro.core.erm import ERMProblem, synth_classification
+from repro.core.solvers import SolverConfig
+from repro.core.step_rules import (BacktrackingLS, ConstantStep,
+                                   VectorizedLS, dense_probe, ell_probe,
+                                   fused_probe, from_config,
+                                   trial_objectives, validate_ls)
+from tests.hypothesis_compat import given, settings, st
+
+L_ROWS, N_FEAT, B = 120, 16, 24
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, y, _ = synth_classification(jax.random.PRNGKey(3), L_ROWS, N_FEAT,
+                                   separation=2.0)
+    return X, y
+
+
+# ------------------------------------------------------------ rule parity ----
+
+@settings(max_examples=25)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       loss_i=st.integers(min_value=0, max_value=2),
+       shrink=st.floats(min_value=0.3, max_value=0.9),
+       step0=st.floats(min_value=0.25, max_value=8.0))
+def test_vectorized_picks_same_rung_as_sequential(seed, loss_i, shrink,
+                                                  step0):
+    """Property: over random problems, directions and ladder geometries the
+    two rules return the SAME alpha (both only ever return ladder rungs;
+    the accepted rung is the first passing Armijo in both)."""
+    loss = ("logistic", "square", "smooth_hinge")[loss_i]
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X, y, _ = synth_classification(k1, B, N_FEAT)
+    prob = ERMProblem(loss=loss, reg=1e-3)
+    w = jax.random.normal(k2, (N_FEAT,)) * 0.4
+    g = prob.batch_grad(w, X, y)
+    # a noisy descent-ish direction, like a variance-reduced solver's v
+    v = g + 0.3 * jax.random.normal(k3, (N_FEAT,))
+    probe = dense_probe(prob, X, y)
+    seq = BacktrackingLS(step0, shrink=shrink, max_iter=12)
+    vec = VectorizedLS(step0, shrink=shrink, max_iter=12)
+    a_s = float(seq.pick(probe, w, v, g))
+    a_v = float(vec.pick(probe, w, v, g))
+    assert a_s == a_v, (loss, seed, a_s, a_v)
+
+
+@pytest.mark.parametrize("scheme", samplers.SCHEMES)
+@pytest.mark.parametrize("solver", solvers.SOLVERS)
+def test_solver_trajectory_identical_under_both_ls_modes(data, solver,
+                                                         scheme):
+    """All five solvers × RS/CS/SS: the full line-search trajectory is
+    bit-identical between ls modes — same accepted rung every batch means
+    the same alpha exactly (both ladders are the same repeated-multiply
+    sequence), hence the same weight updates."""
+    X, y = data
+    w0 = jnp.zeros(N_FEAT)
+    out = {}
+    for ls_mode in step_rules.LS_MODES:
+        cfg = SolverConfig(solver=solver, step_mode=solvers.LINE_SEARCH,
+                           step_size=1.0, ls_mode=ls_mode)
+        w, hist = solvers.run(ERMProblem(reg=1e-3), cfg, scheme, X, y, w0,
+                              batch_size=B, epochs=3)
+        out[ls_mode] = (np.asarray(w), np.asarray(hist))
+    np.testing.assert_array_equal(out["sequential"][0], out["vectorized"][0])
+    np.testing.assert_array_equal(out["sequential"][1], out["vectorized"][1])
+
+
+def test_rung_exhaustion_matches(data):
+    """When no rung passes Armijo within max_iter, both rules return the
+    (untested) exhaustion rung alpha0 * shrink^max_iter."""
+    X, y = data
+    prob = ERMProblem(reg=1e-3)
+    probe = dense_probe(prob, X[:B], y[:B])
+    w = jnp.ones(N_FEAT)
+    g = prob.batch_grad(w, X[:B], y[:B])
+    # make acceptance impossible: demand a decrease no step can deliver
+    seq = BacktrackingLS(1.0, c=0.999999, max_iter=6)
+    vec = VectorizedLS(1.0, c=0.999999, max_iter=6)
+    a_s, a_v = float(seq.pick(probe, w, g, g)), float(vec.pick(probe, w, g, g))
+    assert a_s == a_v == pytest.approx(0.5 ** 6)
+
+
+def test_constant_step_ignores_probe():
+    rule = ConstantStep(0.123)
+    assert not rule.needs_probe
+    a = rule.pick(None, jnp.zeros(3), jnp.ones(3), jnp.ones(3))
+    assert float(a) == pytest.approx(0.123)
+
+
+# ---------------------------------------------------------------- probes ----
+
+def test_trial_objectives_match_explicit_evaluation(data):
+    """The shared-margins ladder (two margin passes + three dots) equals
+    objective(w - alpha v) evaluated point by point."""
+    X, y = data
+    prob = ERMProblem(loss="smooth_hinge", reg=1e-2)
+    probe = dense_probe(prob, X[:B], y[:B])
+    w = jax.random.normal(jax.random.PRNGKey(0), (N_FEAT,)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(1), (N_FEAT,))
+    alphas = jnp.asarray([0.0, 1.0, 0.5, 0.125, 2.0])
+    got = trial_objectives(probe, w, v, alphas)
+    want = [float(prob.batch_objective(w - a * v, X[:B], y[:B]))
+            for a in np.asarray(alphas)]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-7)
+
+
+def test_ell_probe_matches_dense_probe(data):
+    """The padded-ELL probe (sparse chunked engine) agrees with the dense
+    probe on the densified batch, so CSR line search picks the same rungs."""
+    X, y = data
+    prob = ERMProblem(reg=1e-3)
+    Xb, yb = X[:B], y[:B]
+    # express the dense batch as a fully-dense ELL block (cols 0..n-1)
+    cols = jnp.tile(jnp.arange(N_FEAT, dtype=jnp.int32), (B, 1))
+    vals = Xb
+    pd = dense_probe(prob, Xb, yb)
+    pe = ell_probe(prob, cols, vals, yb)
+    w = jax.random.normal(jax.random.PRNGKey(7), (N_FEAT,)) * 0.2
+    v = prob.batch_grad(w, Xb, yb)
+    np.testing.assert_allclose(np.asarray(pe.margins(w)),
+                               np.asarray(pd.margins(w)), rtol=1e-5)
+    for rule in (BacktrackingLS(1.0), VectorizedLS(1.0)):
+        assert float(rule.pick(pd, w, v, v)) == float(rule.pick(pe, w, v, v))
+
+
+@pytest.mark.parametrize("mode", ["block", "rows"])
+def test_fused_probe_matches_dense_probe(data, mode):
+    """The fused-margins probe (Pallas kernels, interpret mode on CPU)
+    yields the same trial objectives and the same accepted rung as the
+    dense probe over the gathered batch."""
+    X, y = data
+    prob = ERMProblem(reg=1e-3)
+    if mode == "block":
+        start = jnp.asarray(40)
+        fp = fused_probe(prob, X, y, start=start, batch_size=B,
+                         interpret=True)
+        Xb, yb = X[40:40 + B], y[40:40 + B]
+    else:
+        idx = jnp.asarray(np.arange(0, 2 * B, 2), jnp.int32)
+        fp = fused_probe(prob, X, y, idx=idx, interpret=True)
+        Xb, yb = X[idx], y[idx]
+    pd = dense_probe(prob, Xb, yb)
+    w = jax.random.normal(jax.random.PRNGKey(11), (N_FEAT,)) * 0.3
+    v = prob.batch_grad(w, Xb, yb)
+    np.testing.assert_allclose(np.asarray(fp.margins(w)),
+                               np.asarray(pd.margins(w)),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(fp.objective(w)),
+                               float(pd.objective(w)), rtol=1e-5)
+    assert float(VectorizedLS(1.0).pick(fp, w, v, v)) == \
+        float(VectorizedLS(1.0).pick(pd, w, v, v))
+
+
+# ------------------------------------------------------------- validation ----
+
+@pytest.mark.parametrize("kw", [
+    dict(step_size=0.0), dict(step_size=-1.0),
+    dict(shrink=1.0), dict(shrink=0.0), dict(shrink=-0.5), dict(shrink=1.5),
+    dict(c=0.0), dict(c=1.0), dict(max_iter=0),
+])
+def test_validate_ls_rejects_nonterminating_hyperparams(kw):
+    base = dict(step_size=1.0, shrink=0.5, c=1e-4, max_iter=25)
+    with pytest.raises(ValueError):
+        validate_ls(**{**base, **kw})
+
+
+def test_from_config_validates_and_dispatches():
+    assert isinstance(from_config(SolverConfig(step_mode="constant")),
+                      ConstantStep)
+    assert isinstance(
+        from_config(SolverConfig(step_mode="line_search", step_size=1.0)),
+        VectorizedLS)
+    assert isinstance(
+        from_config(SolverConfig(step_mode="line_search", step_size=1.0,
+                                 ls_mode="sequential")), BacktrackingLS)
+    with pytest.raises(ValueError, match="shrink"):
+        from_config(SolverConfig(step_mode="line_search", step_size=1.0,
+                                 ls_shrink=1.0))
+    with pytest.raises(ValueError, match="positive"):
+        from_config(SolverConfig(step_mode="line_search", step_size=0.0))
+    with pytest.raises(ValueError, match="ls_mode"):
+        from_config(SolverConfig(step_mode="line_search", step_size=1.0,
+                                 ls_mode="turbo"))
+    with pytest.raises(ValueError, match="step mode"):
+        from_config(SolverConfig(step_mode="wolfe"))
+
+
+def test_make_step_fn_rejects_endless_ls_config(data):
+    """A SolverConfig that would loop forever dies when the engine builds
+    its step function, not inside a jitted while_loop."""
+    with pytest.raises(ValueError, match="shrink"):
+        step = solvers.make_step_fn(
+            ERMProblem(), SolverConfig(step_mode="line_search",
+                                       step_size=1.0, ls_shrink=2.0))
+        X, y = data
+        step(solvers.init_state("mbsgd", jnp.zeros(N_FEAT), 5),
+             X[:B], y[:B], jnp.asarray(0))
