@@ -10,6 +10,12 @@ planner picked the expected backend and the run produced a finite
 objective, then writes each ``RunResult`` JSON so CI can upload them as
 artifacts.
 
+When more than one jax device is visible (the multi-device CI job forces
+8 CPU devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+two sharded cells join the matrix: ``sharded-streamed`` and
+``sharded-resident`` over the full device mesh, asserting the per-device
+H2D accounting landed in the RunResult JSON.
+
   PYTHONPATH=src python benchmarks/api_smoke.py --out /tmp/api_smoke
 """
 from __future__ import annotations
@@ -18,7 +24,10 @@ import argparse
 import math
 from pathlib import Path
 
-from repro.api import (FUSED, RESIDENT, RESIDENT_FUSED, SPARSE_CSR, STREAMED,
+import jax
+
+from repro.api import (FUSED, RESIDENT, RESIDENT_FUSED, SHARDED_RESIDENT,
+                       SHARDED_STREAMED, SPARSE_CSR, STREAMED,
                        STREAMED_EAGER, DataSource, ExperimentSpec, execute,
                        plan)
 from repro.data import dataset, sparse
@@ -33,7 +42,7 @@ def build_cells(out_dir: Path):
         sparse.synth_sparse_classification(csr, rows=512, features=256,
                                            density=0.02)
     base = dict(batch_size=128, epochs=2)
-    return [
+    cells = [
         ("streamed-eager", STREAMED_EAGER,
          ExperimentSpec(data=DataSource.corpus(dense), placement=STREAMED,
                         **base)),
@@ -46,6 +55,18 @@ def build_cells(out_dir: Path):
         ("sparse-csr", SPARSE_CSR,
          ExperimentSpec(data=DataSource.corpus(csr), **base)),
     ]
+    ndev = len(jax.devices())
+    if ndev > 1:
+        mesh = jax.make_mesh((ndev,), ("data",))
+        cells += [
+            ("sharded-streamed", SHARDED_STREAMED,
+             ExperimentSpec(data=DataSource.corpus(dense),
+                            placement=STREAMED, mesh=mesh, **base)),
+            ("sharded-resident", SHARDED_RESIDENT,
+             ExperimentSpec(data=DataSource.corpus(dense),
+                            placement=RESIDENT, mesh=mesh, **base)),
+        ]
+    return cells
 
 
 def main(out_dir: Path) -> None:
@@ -58,6 +79,14 @@ def main(out_dir: Path) -> None:
         res = execute(p)
         assert math.isfinite(res.objective), (name, res.objective)
         assert res.epochs_run == spec.epochs
+        blob = res.to_json()
+        if p.shards > 1:
+            # the sharded cells must carry per-device H2D accounting in the
+            # uploaded artifact — the multi-device CI job's contract
+            assert blob["plan"]["devices"] == p.shards, blob["plan"]
+            assert blob["stats"]["shards"] == p.shards, blob["stats"]
+            assert blob["stats"]["h2d_bytes_per_device"] > 0, blob["stats"]
+            assert blob["breakdown"]["h2d_mb_per_device"] > 0
         path = res.save_json(out_dir / f"run_{name}.json")
         print(f"{name}: objective={res.objective:.6f} "
               f"epoch_s={res.breakdown()['epoch_s']:.4f} -> {path}")

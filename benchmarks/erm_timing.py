@@ -71,31 +71,38 @@ def _annotate_vs_rs(r, times, access):
 def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
             batch: int, epochs: int, reg: float = 1e-4,
             chunk: int | None = None, prefetch: int = 2,
-            resident: bool = False, ls_mode: str = AUTO):
+            resident: bool = False, ls_mode: str = AUTO, mesh=None,
+            reduction: str = AUTO):
     """Train and time one (solver, step rule, scheme) cell through
     plan()/execute(); returns the BENCH_erm result-dict schema.  LS cells
     carry the resolved ``ls_mode`` column (``vectorized`` trial-ladder
     sweep by default; ``--ls-mode sequential`` re-times the old
-    per-batch backtracking ``while_loop`` baseline)."""
+    per-batch backtracking ``while_loop`` baseline).  With ``mesh`` the
+    planner lowers to the sharded backends and the row gains ``devices`` /
+    per-device H2D columns."""
     spec = ExperimentSpec(
         data=DataSource.corpus(corpus), loss="logistic", reg=reg,
         solver=solver, scheme=scheme, step_mode=step_mode, ls_mode=ls_mode,
         batch_size=batch, epochs=epochs, chunk=chunk, prefetch=prefetch,
         placement=RESIDENT if resident else STREAMED,
-        record_objective=False)
+        record_objective=False, mesh=mesh, reduction=reduction)
     p = plan(spec)
     res = execute(p)
     r = {
         "name": f"erm_{solver}_{step_mode}_{scheme}"
-                + ("_resident" if resident else ""),
+                + ("_resident" if resident else "")
+                + (f"_d{p.shards}" if p.shards > 1 else ""),
         "solver": solver, "step_mode": step_mode, "scheme": scheme,
         "epochs": epochs, "chunk": p.chunk, "backend": p.backend,
+        "devices": p.shards,
         **res.breakdown(),
     }
     if step_mode == LINE_SEARCH:
         r["ls_mode"] = p.cfg.ls_mode
     if resident:
         r["resident"] = True
+    if p.shards > 1:
+        r["reduction"] = p.reduction
     return r
 
 
@@ -140,11 +147,19 @@ def _derived_csv(r) -> str:
 def main(rows=100_000, features=64, batch=500, epochs=3,
          solvers_=SOLVERS, corpus_dir=Path("artifacts/bench"),
          chunk=None, json_out=None, resident=False, ls_mode=AUTO,
-         repeats=1):
+         repeats=1, devices=1, reduction=AUTO):
     corpus_dir.mkdir(parents=True, exist_ok=True)
     corpus = corpus_dir / f"erm_{rows}x{features}.bin"
     if not corpus.exists():
         dataset.synth_erm_corpus(corpus, rows=rows, features=features)
+    mesh = None
+    if devices > 1:
+        if len(jax.devices()) < devices:
+            raise SystemExit(
+                f"--devices {devices} but only {len(jax.devices())} jax "
+                f"devices visible; on CPU run under XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={devices}")
+        mesh = jax.make_mesh((devices,), ("data",))
     out, results = [], []
     for solver in solvers_:
         for step_mode in (CONSTANT, LINE_SEARCH):
@@ -152,7 +167,9 @@ def main(rows=100_000, features=64, batch=500, epochs=3,
             for scheme in samplers.SCHEMES:
                 cell = partial(run_one, corpus, solver, step_mode, scheme,
                                batch=batch, epochs=epochs, chunk=chunk,
-                               resident=resident)
+                               resident=resident, mesh=mesh,
+                               reduction=reduction if mesh is not None
+                               else AUTO)
                 if step_mode == LINE_SEARCH and ls_mode == BOTH:
                     # interleave the two rules within each repeat so the
                     # comparison is time-local (shared machines drift by
@@ -187,7 +204,7 @@ def main(rows=100_000, features=64, batch=500, epochs=3,
                      "batch": batch, "epochs": epochs, "resident": resident,
                      "ls_mode": (ls_mode if ls_mode != AUTO
                                  else "vectorized"),
-                     "repeats": repeats,
+                     "repeats": repeats, "devices": devices,
                      "backend": jax.default_backend(),
                      "unit": "seconds per epoch"},
             "results": results,
@@ -269,6 +286,16 @@ if __name__ == "__main__":
     ap.add_argument("--repeats", type=int, default=1,
                     help="measurements per cell; the minimal-epoch_s run "
                          "is kept (noise floor on shared machines)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data-parallel mesh width: chunks stage sharded "
+                         "across this many devices and every row gains a "
+                         "devices column; on CPU run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--reduction", choices=(AUTO, "gather", "psum"),
+                    default=AUTO,
+                    help="sharded combine mode: gather (default; bit-"
+                         "identical to single host, access-sharded) or "
+                         "psum (compute-sharded, ulp-level drift)")
     ap.add_argument("--json-out", type=Path, default=None,
                     help=f"write the breakdown JSON here; opt-in so ad-hoc "
                          f"runs don't clobber the committed {DEFAULT_JSON.name}"
@@ -276,6 +303,18 @@ if __name__ == "__main__":
     a = ap.parse_args()
     if a.sparse and a.resident:
         ap.error("--resident stages a dense corpus; drop --sparse")
+    if a.devices > 1:
+        if a.sparse:
+            ap.error("--devices shards dense chunks; sharded CSR staging "
+                     "is a follow-on — drop --sparse")
+        if a.batch % a.devices:
+            ap.error(f"--batch {a.batch} must divide across --devices "
+                     f"{a.devices} (the planner rejects uneven shards)")
+    elif a.reduction != AUTO:
+        # surface the mistake the planner would catch, instead of silently
+        # benchmarking single-host rows labeled as a sharded request
+        ap.error(f"--reduction {a.reduction} needs --devices N>1 "
+                 f"(it picks how a mesh combines per-device work)")
     if a.sparse:
         sel = tuple(s for s in (a.solvers or "mbsgd").split(",") if s)
         rows_out = main_sparse(
@@ -288,6 +327,7 @@ if __name__ == "__main__":
         rows_out = main(a.rows, a.features or 64, a.batch, a.epochs,
                         solvers_=sel, chunk=a.chunk, json_out=a.json_out,
                         resident=a.resident, ls_mode=a.ls_mode,
-                        repeats=a.repeats)
+                        repeats=a.repeats, devices=a.devices,
+                        reduction=a.reduction)
     for name, us, derived in rows_out:
         print(f"{name},{us:.2f},{derived}")

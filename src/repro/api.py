@@ -15,8 +15,9 @@ See :mod:`repro.core.experiment` for the planner rules and the
 backend-selection matrix.
 """
 from .core.experiment import (  # noqa: F401
-    ARRAYS, AUTO, BACKENDS, CSR, DENSE, EAGER, FUSED, LOSSES, RESIDENT,
-    RESIDENT_EAGER, RESIDENT_FUSED, SPARSE_CSR, STREAMED, STREAMED_EAGER,
+    ARRAYS, AUTO, BACKENDS, CSR, DENSE, EAGER, FUSED, GATHER, LOSSES, PSUM,
+    RESIDENT, RESIDENT_EAGER, RESIDENT_FUSED, SHARDED_RESIDENT,
+    SHARDED_STREAMED, SPARSE_CSR, STREAMED, STREAMED_EAGER,
     DataSource, ExecutionPlan, ExperimentSpec, PlanError, RunResult,
     execute, plan, run_experiment)
 from .core.samplers import CYCLIC, RANDOM, SCHEMES, SYSTEMATIC  # noqa: F401
@@ -25,7 +26,8 @@ from .core.step_rules import LS_MODES, SEQUENTIAL, VECTORIZED  # noqa: F401
 
 __all__ = [
     "ARRAYS", "AUTO", "BACKENDS", "CSR", "DENSE", "EAGER", "FUSED",
-    "LOSSES", "RESIDENT", "RESIDENT_EAGER", "RESIDENT_FUSED", "SPARSE_CSR",
+    "GATHER", "LOSSES", "PSUM", "RESIDENT", "RESIDENT_EAGER",
+    "RESIDENT_FUSED", "SHARDED_RESIDENT", "SHARDED_STREAMED", "SPARSE_CSR",
     "STREAMED", "STREAMED_EAGER",
     "CYCLIC", "RANDOM", "SCHEMES", "SYSTEMATIC",
     "CONSTANT", "LINE_SEARCH", "SOLVERS",

@@ -76,6 +76,30 @@ class ERMProblem:
     def batch_grad_data(self, w: jax.Array, Xb: jax.Array, yb: jax.Array) -> jax.Array:
         return jax.grad(self.data_objective)(w, Xb, yb)
 
+    # ---- padded-corpus (masked) variants --------------------------------
+    # The sharded 'psum' execution mode pads the corpus with zero rows so it
+    # shards evenly across the device mesh.  Zero rows contribute exactly
+    # zero to X^T d, but their LOSS at z=0 is not zero — so the full-corpus
+    # objective/gradient mask them out and normalize by the TRUE row count.
+
+    def masked_data_objective(self, w: jax.Array, X: jax.Array, y: jax.Array,
+                              rows: int) -> jax.Array:
+        """Mean data loss over the first ``rows`` rows of a (possibly
+        zero-padded) corpus; ``rows`` is static."""
+        per = _margin_losses(self.loss)(X @ w, y)
+        per = jnp.where(jnp.arange(X.shape[0]) < rows, per, 0.0)
+        return jnp.sum(per) / rows
+
+    def masked_objective(self, w: jax.Array, X: jax.Array, y: jax.Array,
+                         rows: int) -> jax.Array:
+        return (self.masked_data_objective(w, X, y, rows)
+                + 0.5 * self.reg * jnp.dot(w, w))
+
+    def masked_full_grad(self, w: jax.Array, X: jax.Array, y: jax.Array,
+                         rows: int, data_term_only: bool = False) -> jax.Array:
+        g = jax.grad(self.masked_data_objective)(w, X, y, rows)
+        return g if data_term_only else g + self.reg * w
+
     # ---- sparse (padded-ELL) mini-batch, same subproblem ----------------
     # A CSR mini-batch arrives as (cols, vals): (b, kmax) int32/float32 with
     # zero-valued padding (repro.data.sparse.SparseBatch).  The margin is a

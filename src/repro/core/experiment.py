@@ -17,9 +17,12 @@ declarative surface:
   (``placement``, ``kernel``, ``chunk``) default to ``"auto"``.
 * :func:`plan` — lowers a spec into an explicit :class:`ExecutionPlan`:
   streamed vs resident (corpus bytes vs device memory), dense vs CSR,
-  fused vs eager kernels, and the chunked epoch shape.  Invalid
-  combinations fail HERE with a :class:`PlanError` naming the conflict —
-  never silently fall back at run time.  The chosen backend and every
+  fused vs eager kernels, single-host vs sharded data-parallel (a
+  ``mesh`` with >1 batch-axis devices selects the sharded backends, with
+  ``reduction='gather'`` — bit-identical, access-sharded — or ``'psum'``
+  — compute-sharded), and the chunked epoch shape.  Invalid combinations
+  fail HERE with a :class:`PlanError` naming the conflict — never
+  silently fall back at run time.  The chosen backend and every
   decision's reason are recorded on the plan (``plan.why``,
   ``plan.describe()``).
 * :func:`execute` — runs a plan and returns a uniform :class:`RunResult`:
@@ -45,7 +48,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from ..distributed.sharding import data_parallel_width, make_staging_put
 from . import samplers
 from .erm import ERMProblem, LOGISTIC, SMOOTH_HINGE, SQUARE
 from .solvers import (CONSTANT, LINE_SEARCH, SOLVERS, SolverConfig,
@@ -59,6 +64,7 @@ LOSSES = (LOGISTIC, SQUARE, SMOOTH_HINGE)
 AUTO = "auto"
 STREAMED, RESIDENT = "streamed", "resident"     # placement
 FUSED, EAGER = "fused", "eager"                 # kernel
+GATHER, PSUM = "gather", "psum"                 # sharded reduction mode
 
 # ---- data source kinds -----------------------------------------------------
 ARRAYS, DENSE, CSR = "arrays", "dense", "csr"
@@ -68,7 +74,10 @@ STREAMED_EAGER = "streamed-eager"    # DataPipeline + chunked epoch engine
 SPARSE_CSR = "sparse-csr"            # SparsePipeline + sparse chunked engine
 RESIDENT_EAGER = "resident-eager"    # in-graph epochs, gather/dynamic_slice
 RESIDENT_FUSED = "resident-fused"    # in-graph epochs, fused Pallas kernels
-BACKENDS = (STREAMED_EAGER, SPARSE_CSR, RESIDENT_EAGER, RESIDENT_FUSED)
+SHARDED_STREAMED = "sharded-streamed"  # chunks sharded across a device mesh
+SHARDED_RESIDENT = "sharded-resident"  # corpus sharded across a device mesh
+BACKENDS = (STREAMED_EAGER, SPARSE_CSR, RESIDENT_EAGER, RESIDENT_FUSED,
+            SHARDED_STREAMED, SHARDED_RESIDENT)
 
 # resident-placement budget when the device reports no memory stats
 # (CPU hosts): stage corpora up to this size, stream anything larger
@@ -155,6 +164,18 @@ class ExperimentSpec:
     chunk: Optional[int] = None         # batches per device call (streamed)
     prefetch: int = 2                   # pipeline read-ahead (streamed)
     resident_budget: Optional[int] = None   # bytes; None → device stats
+    # data-parallel placement: a mesh with >1 batch-axis devices lowers to
+    # the sharded backends (sharded-streamed / sharded-resident); a 1-device
+    # mesh (or None) keeps the single-host backends.  ``reduction`` picks how
+    # per-device work combines: 'gather' (default) stages chunks sharded —
+    # per-device H2D drops by the mesh width — then reshards to replicated
+    # at the jit boundary, so trajectories are BIT-IDENTICAL to the
+    # single-host backends; 'psum' keeps chunks sharded through the epoch
+    # scan (compute and memory per device drop too) with GSPMD combining
+    # partial gradients — deterministic per mesh, but reduction order
+    # differs from the single-host circuit by ulps.
+    mesh: Optional[Mesh] = None
+    reduction: str = AUTO               # AUTO | GATHER | PSUM
 
     @property
     def problem(self) -> ERMProblem:
@@ -187,6 +208,8 @@ class ExecutionPlan:
     corpus_bytes: int
     kmax: int = 0         # densest CSR row (sparse only)
     nnz: int = 0          # stored nonzeros (sparse only)
+    shards: int = 1       # data-parallel width (1 = single-host backends)
+    reduction: Optional[str] = None     # GATHER | PSUM (sharded only)
     why: Tuple[str, ...] = ()
 
     @property
@@ -215,6 +238,9 @@ class ExecutionPlan:
             f"{self.spec.batch_size}, {self.chunk} per device call, "
             f"{self.spec.epochs} epochs",
         ]
+        if self.shards > 1:
+            lines.append(f"mesh      : {self.shards}-way data parallel, "
+                         f"{self.reduction} reduction")
         lines += [f"  - {w}" for w in self.why]
         return "\n".join(lines)
 
@@ -310,6 +336,13 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
                         f"{spec.placement!r}")
     if spec.kernel not in (AUTO, FUSED, EAGER):
         raise PlanError(f"kernel must be auto/fused/eager, got {spec.kernel!r}")
+    if spec.reduction not in (AUTO, GATHER, PSUM):
+        raise PlanError(f"reduction must be auto/gather/psum, got "
+                        f"{spec.reduction!r}")
+    if spec.mesh is None and spec.reduction != AUTO:
+        raise PlanError(
+            "reduction= picks how a device mesh combines per-device work; "
+            "it needs mesh= (leave it 'auto' for single-host runs)")
     if spec.batch_size <= 0 or spec.epochs <= 0:
         raise PlanError("batch_size and epochs must be positive")
 
@@ -320,6 +353,55 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
             f"({probe.rows} rows) — the samplers pad the TRAILING batch by "
             f"wrap-around, they don't oversample the whole corpus")
     why: List[str] = []
+
+    # ---- data parallelism: mesh width and reduction mode -----------------
+    shards = data_parallel_width(spec.mesh)
+    reduction = None
+    if shards > 1:
+        if probe.fmt == CSR:
+            raise PlanError(
+                "sharded placement splits dense (l, n) chunks on the batch "
+                "axis; CSR corpora keep the single-host sparse engine "
+                "(sharded CSR staging is a ROADMAP follow-on)")
+        if spec.kernel == FUSED:
+            raise PlanError(
+                "kernel='fused' rejected under a >1-device mesh: the fused "
+                "kernels' DMA scheduling assumes a single-device resident "
+                "corpus; sharded placements run the eager engines")
+        if spec.batch_size % shards != 0:
+            raise PlanError(
+                f"batch_size {spec.batch_size} does not divide across the "
+                f"{shards}-way mesh batch axis — staged chunks would "
+                f"silently replicate instead of sharding; pick a batch size "
+                f"divisible by {shards}")
+        reduction = GATHER if spec.reduction == AUTO else spec.reduction
+        if spec.reduction == AUTO:
+            why.append(f"{shards}-way mesh → 'gather' reduction: chunks "
+                       "stage sharded (per-device H2D /"
+                       f"{shards}), then replicate at the jit boundary — "
+                       "bit-identical to the single-host trajectory "
+                       "(reduction='psum' also divides compute, at ulp-"
+                       "level trajectory drift)")
+        else:
+            why.append(f"reduction {reduction!r} forced by spec on the "
+                       f"{shards}-way mesh")
+    elif spec.mesh is not None:
+        if spec.mesh.devices.size > 1:
+            # a multi-device mesh that resolves to width 1 means the batch
+            # axis cannot map onto it — falling back silently would ignore
+            # the user's parallelism request
+            raise PlanError(
+                f"mesh has {spec.mesh.devices.size} devices but its axes "
+                f"{spec.mesh.axis_names} include none of the batch-axis "
+                f"names ('pod', 'data') — name a data-parallel axis "
+                f"'data' (e.g. jax.make_mesh((N,), ('data',)))")
+        if spec.reduction != AUTO:
+            raise PlanError(
+                f"reduction={spec.reduction!r} forced on a 1-device mesh — "
+                f"there is no per-device work to combine; sharded "
+                f"placement needs >1 data-parallel devices")
+        why.append("1-device mesh → single-host backends (sharded "
+                   "placement needs >1 data-parallel devices)")
 
     # ---- placement: streamed vs resident --------------------------------
     if spec.data.kind == ARRAYS:
@@ -341,14 +423,19 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
         why.append(f"placement {placement!r} forced by spec")
     else:
         budget = _resident_budget(spec)
-        if probe.nbytes <= budget:
+        # psum keeps the corpus sharded through the epoch scan, so each
+        # device only holds its 1/shards slice; gather replicates at the
+        # jit boundary and needs the full corpus per device
+        nbytes_eff = probe.nbytes // (shards if reduction == PSUM else 1)
+        per_dev = " per device" if reduction == PSUM else ""
+        if nbytes_eff <= budget:
             placement = RESIDENT
-            why.append(f"corpus {probe.nbytes / 1e6:.1f} MB fits the "
+            why.append(f"corpus {nbytes_eff / 1e6:.1f} MB{per_dev} fits the "
                        f"{budget / 1e6:.0f} MB device budget → resident")
         else:
             placement = STREAMED
-            why.append(f"corpus {probe.nbytes / 1e6:.1f} MB exceeds the "
-                       f"{budget / 1e6:.0f} MB device budget → streamed")
+            why.append(f"corpus {nbytes_eff / 1e6:.1f} MB{per_dev} exceeds "
+                       f"the {budget / 1e6:.0f} MB device budget → streamed")
 
     # ---- kernel: fused vs eager ------------------------------------------
     ok, reason = _fused_support(spec, probe)
@@ -366,6 +453,10 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
         why.append("fused kernels forced by spec")
     elif spec.kernel == EAGER or placement != RESIDENT:
         kernel = EAGER
+    elif shards > 1:
+        kernel = EAGER
+        why.append("sharded placement runs the eager engines (fused kernel "
+                   "scheduling under a device mesh is a follow-on)")
     elif not ok:
         kernel = EAGER
         why.append(f"fused kernels skipped: {reason}")
@@ -418,6 +509,9 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
 
     if probe.fmt == CSR:
         backend = SPARSE_CSR
+    elif shards > 1:
+        backend = (SHARDED_RESIDENT if placement == RESIDENT
+                   else SHARDED_STREAMED)
     elif placement == RESIDENT:
         backend = RESIDENT_FUSED if kernel == FUSED else RESIDENT_EAGER
     else:
@@ -427,7 +521,8 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
                          rows=probe.rows, features=probe.features,
                          num_batches=m, chunk=chunk,
                          corpus_bytes=probe.nbytes, kmax=probe.kmax,
-                         nnz=probe.nnz, why=tuple(why))
+                         nnz=probe.nnz, shards=shards, reduction=reduction,
+                         why=tuple(why))
 
 
 def _auto_step_size(spec: ExperimentSpec, probe: _Probe) -> float:
@@ -493,6 +588,13 @@ class RunResult:
                 access_s_per_epoch=st.s_per_batch * m,   # producer thread
                 h2d_s_per_epoch=st.h2d_s / max(st.staged, 1) * (-(-m // K)),
                 access_mb_per_epoch=st.read_mb / max(st.batches, 1) * m)
+        if st.shards > 1:
+            # per-device access accounting: staged bytes split `shards` ways
+            # on the batch axis; gather_s is the D2D replication slice of
+            # h2d_s ('gather' reduction only)
+            out.update(shards=st.shards,
+                       h2d_mb_per_device=st.h2d_bytes_per_device / 1e6,
+                       gather_s_per_epoch=st.gather_s / e)
         return out
 
     def to_json(self) -> Dict:
@@ -511,6 +613,7 @@ class RunResult:
                      "batch_size": p.spec.batch_size, "rows": p.rows,
                      "features": p.features, "num_batches": p.num_batches,
                      "chunk": p.chunk, "corpus_bytes": p.corpus_bytes,
+                     "devices": p.shards, "reduction": p.reduction,
                      "why": list(p.why)},
             "epochs_run": self.epochs_run,
             "epochs_done": self.epochs_done,
@@ -519,7 +622,9 @@ class RunResult:
             "w_norm": float(np.linalg.norm(self.w)),
             "sampler_state": self.sampler_state,
             "breakdown": self.breakdown(),
-            "stats": dataclasses.asdict(self.stats),
+            "stats": {**dataclasses.asdict(self.stats),
+                      "h2d_bytes_per_device":
+                          self.stats.h2d_bytes_per_device},
         }
 
     def save_json(self, path) -> Path:
@@ -592,18 +697,73 @@ def _objective_jit(problem: ERMProblem, w: jax.Array, X: jax.Array,
     return problem.objective(w, X, y)
 
 
+@partial(jax.jit, static_argnames=("problem", "rows"))
+def _masked_objective_jit(problem: ERMProblem, rows: int, w: jax.Array,
+                          X: jax.Array, y: jax.Array) -> jax.Array:
+    # sharded 'psum' placement: the corpus carries zero-row padding so it
+    # shards evenly — mask it out of the objective
+    return problem.masked_objective(w, X, y, rows)
+
+
+@partial(jax.jit, static_argnames=("rows",))
+def _trim_rows(a: jax.Array, rows: int) -> jax.Array:
+    return a[:rows]
+
+
+def _pad_rows(a: np.ndarray, to_rows: int) -> np.ndarray:
+    if a.shape[0] == to_rows:
+        return a
+    pad = np.zeros((to_rows - a.shape[0],) + a.shape[1:], a.dtype)
+    return np.concatenate([a, pad])
+
+
+def _stage_resident_sharded(plan_: ExecutionPlan, Xh: np.ndarray,
+                            yh: np.ndarray, stats) -> Tuple[jax.Array,
+                                                            jax.Array, float]:
+    """Stage a host corpus across the mesh: zero-pad the rows so they shard
+    evenly, place each device's slice over the host link (the same
+    ``make_staging_put`` the streamed stager uses), and — in 'gather' mode —
+    trim the padding after the put's reshard-to-replicated, so the epoch
+    engine sees exactly the arrays the single-host backend would.  Returns
+    ``(X, y, staging_seconds)``."""
+    mesh, shards = plan_.spec.mesh, plan_.shards
+    rows = Xh.shape[0]
+    # pre-pad byte count: bytes_staged stays comparable with single-host
+    # rows (the README's contract); the pad rows are a placement artifact
+    nbytes = Xh.nbytes + yh.nbytes
+    lpad = shards * (-(-rows // shards))
+    Xh, yh = _pad_rows(Xh, lpad), _pad_rows(yh, lpad)
+    stats.shards = max(stats.shards, shards)
+    put = make_staging_put(mesh, (("batch", None), ("batch",)),
+                           gather=plan_.reduction == GATHER, stats=stats)
+    t0 = time.perf_counter()
+    X, y = put((Xh, yh))
+    if plan_.reduction == GATHER and lpad != rows:
+        X, y = jax.block_until_ready((_trim_rows(X, rows),
+                                      _trim_rows(y, rows)))
+    h2d_dt = time.perf_counter() - t0
+    stats.record_h2d(h2d_dt, nbytes)
+    return X, y, h2d_dt
+
+
 def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
                       epochs: int) -> RunResult:
     from ..data import pipeline as pipemod
 
     spec, cfg = plan_.spec, plan_.cfg
     problem = spec.problem
+    sharded = plan_.shards > 1
     stats = pipemod.AccessStats()
     h2d_dt = 0.0
 
     if spec.data.kind == ARRAYS:
-        X = jnp.asarray(spec.data.X, jnp.float32)
-        y = jnp.asarray(spec.data.y, jnp.float32)
+        if sharded:
+            Xh = np.ascontiguousarray(np.asarray(spec.data.X, np.float32))
+            yh = np.ascontiguousarray(np.asarray(spec.data.y, np.float32))
+            X, y, h2d_dt = _stage_resident_sharded(plan_, Xh, yh, stats)
+        else:
+            X = jnp.asarray(spec.data.X, jnp.float32)
+            y = jnp.asarray(spec.data.y, jnp.float32)
     else:
         pipe = pipemod.DataPipeline(pipemod.PipelineConfig(
             corpus=spec.data.path, batch_size=spec.batch_size,
@@ -615,15 +775,34 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
         # would hide a host-side memcpy inside the H2D number
         Xh = np.ascontiguousarray(rows[:, :n])
         yh = np.ascontiguousarray(rows[:, n])
-        t0 = time.perf_counter()
-        X, y = jax.block_until_ready((jax.device_put(Xh), jax.device_put(yh)))
-        h2d_dt = time.perf_counter() - t0
-        stats.record_h2d(h2d_dt, Xh.nbytes + yh.nbytes)
+        if sharded:
+            X, y, h2d_dt = _stage_resident_sharded(plan_, Xh, yh, stats)
+        else:
+            t0 = time.perf_counter()
+            X, y = jax.block_until_ready((jax.device_put(Xh),
+                                          jax.device_put(yh)))
+            h2d_dt = time.perf_counter() - t0
+            stats.record_h2d(h2d_dt, Xh.nbytes + yh.nbytes)
 
+    # 'psum' keeps the padded corpus sharded through the scan, so the epoch
+    # engine needs the true row count (schedule, clamping, masked snapshot
+    # gradients); 'gather' and single-host see an unpadded corpus and run
+    # the original program — the bit-parity surface
+    psum = sharded and plan_.reduction == PSUM
     epoch_fn = make_resident_epoch_fn(problem, cfg, spec.scheme,
-                                      spec.batch_size)
-    obj = lambda w: _objective_jit(problem, w, X, y)
+                                      spec.batch_size,
+                                      rows=plan_.rows if psum else None)
+    if psum:
+        obj = lambda w: _masked_objective_jit(problem, plan_.rows, w, X, y)
+    else:
+        obj = lambda w: _objective_jit(problem, w, X, y)
     state, done0 = _resume_state(plan_, resume)
+    if sharded:
+        # solver state rides the mesh replicated: a fresh (or resumed)
+        # state on the default device would force jit to re-specialize
+        # against the committed corpus shardings
+        state = jax.device_put(state, NamedSharding(spec.mesh,
+                                                    PartitionSpec()))
 
     if resume is None:
         # compile (epoch fn, embedded snapshot refresh, objective) untimed;
@@ -632,6 +811,11 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
         # epoch-at-a-time drivers like benchmarks/erm_convergence.py
         dummy = init_state(cfg.solver, jnp.zeros(plan_.features, jnp.float32),
                            plan_.num_batches)
+        if sharded:
+            # match the live state's sharding or the warmup compiles a
+            # throwaway specialization
+            dummy = jax.device_put(dummy, NamedSharding(spec.mesh,
+                                                        PartitionSpec()))
         jax.block_until_ready(epoch_fn(dummy, X, y, jax.random.PRNGKey(1)).w)
         jax.block_until_ready(obj(state.w))
 
@@ -748,11 +932,40 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
             return (total / plan_.rows
                     + 0.5 * problem.reg * float(jnp.dot(w, w)))
 
+    sharded = plan_.shards > 1
+    eval_fn = eval_obj if spec.record_objective else None
+    if sharded:
+        # chunk staging shards the batch axis across the mesh; js (the
+        # batch-slot indices) replicates.  The CSR layout never gets here —
+        # plan() rejects sharded CSR.
+        batch_axes = ((None, "batch", None), (None, "batch"), (None,))
+        gather = plan_.reduction == GATHER
+        rep = NamedSharding(spec.mesh, PartitionSpec())
+        state = jax.device_put(state, rep)
+        # warmup chunks go through the same staging put so the epoch fn
+        # compiles against the shardings the live chunks will carry
+        warm_put = make_staging_put(spec.mesh, batch_axes, gather=gather)
+        stage_zeros = lambda k: warm_put(tuple(
+            np.zeros(a.shape, a.dtype) for a in
+            zeros(k) + (jnp.zeros((k,), jnp.int32),)))
+        # the per-epoch objective probe and the snapshot full-grad stream
+        # run on the HOST corpus either way; pinning w to host first keeps
+        # their arithmetic identical to the single-host backend's
+        host_w = np.asarray
+    else:
+        batch_axes = gather = None
+        stage_zeros = lambda k: zeros(k) + (jnp.zeros((k,), jnp.int32),)
+        host_w = lambda w: w
+    if eval_fn is not None:
+        inner_eval = eval_fn
+        eval_fn = lambda w: inner_eval(host_w(w))
+
     # compile every chunk shape outside the timed region
     for k in sorted({K, m % K} - {0}):
         dummy = init_state(cfg.solver, jnp.zeros(n, jnp.float32), m)
-        jax.block_until_ready(epoch_fn(dummy, *zeros(k),
-                                       jnp.zeros((k,), jnp.int32)))
+        if sharded:
+            dummy = jax.device_put(dummy, rep)
+        jax.block_until_ready(epoch_fn(dummy, *stage_zeros(k)))
 
     snapshot_begin = None
     if cfg.solver in ("svrg", "saag2"):
@@ -760,17 +973,22 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
         # the snapshot full-grad stream compiles too — keep it out of epoch 1
         jax.block_until_ready(full_grad_at(jnp.zeros(n, jnp.float32),
                                            data_term_only=data_only))
-        snapshot_begin = lambda st: epoch_begin(
-            problem, cfg, st,
-            lambda w: full_grad_at(w, data_term_only=data_only))
+        def snapshot_begin(st):
+            st = epoch_begin(problem, cfg, st,
+                             lambda w: full_grad_at(host_w(w),
+                                                    data_term_only=data_only))
+            # keep every state leaf on the mesh: a default-device snapshot
+            # gradient would make the donated epoch call re-specialize
+            return jax.device_put(st, rep) if sharded else st
 
     state, history, compute_s, train_s = _drive_chunked(
         pipe, epoch_fn, state, m=m, K=K, epochs=epochs,
         start_step=start_step, alloc=alloc, fill=fill,
-        snapshot_begin=snapshot_begin,
-        eval_fn=eval_obj if spec.record_objective else None)
+        snapshot_begin=snapshot_begin, eval_fn=eval_fn,
+        mesh=spec.mesh if sharded else None, batch_axes=batch_axes,
+        gather=bool(gather))
 
-    objective = history[-1] if history else eval_obj(state.w)
+    objective = history[-1] if history else eval_obj(host_w(state.w))
     return RunResult(
         plan=plan_, objective=objective, history=np.asarray(history),
         w=np.asarray(state.w), solver_state=state,
@@ -785,7 +1003,8 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
 def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
                    start_step: int, alloc: Callable, fill: Callable,
                    snapshot_begin: Optional[Callable],
-                   eval_fn: Optional[Callable],
+                   eval_fn: Optional[Callable], mesh: Optional[Mesh] = None,
+                   batch_axes=None, gather: bool = False,
                    ) -> Tuple[SolverState, List[float], float, float]:
     """The shared streaming engine under the dense and sparse backends:
     group the pipeline's batch stream into <=K-batch chunks (never crossing
@@ -818,8 +1037,17 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
         js = (np.arange(j0, j0 + bufs[0].shape[0]) % m).astype(np.int32)
         return tuple(bufs) + (js,)
 
-    stager = pipemod.DeviceStager(host_chunks(), put=_put_blocking,
-                                  convert=convert, depth=2, stats=pipe.stats)
+    if mesh is not None:
+        # mesh-aware staging: each chunk lands sharded on the batch axis
+        # (per-device H2D divided by the mesh width); 'gather' mode then
+        # reshards to replicated inside the staging thread
+        stager = pipemod.DeviceStager(host_chunks(), convert=convert,
+                                      depth=2, stats=pipe.stats, mesh=mesh,
+                                      batch_axes=batch_axes, gather=gather)
+    else:
+        stager = pipemod.DeviceStager(host_chunks(), put=_put_blocking,
+                                      convert=convert, depth=2,
+                                      stats=pipe.stats)
     chunks_iter = iter(stager)
     history: List[float] = []
     compute_s = 0.0

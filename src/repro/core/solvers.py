@@ -244,15 +244,30 @@ def epoch_begin(problem: ERMProblem, cfg: SolverConfig, state: SolverState,
 # device-resident jit'd runner
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("problem", "cfg", "scheme", "batch_size"))
+@partial(jax.jit, static_argnames=("problem", "cfg", "scheme", "batch_size",
+                                   "rows"))
 def _run_one_epoch(problem: ERMProblem, cfg: SolverConfig, scheme: str,
                    batch_size: int, state: SolverState, X: jax.Array,
-                   y: jax.Array, key: jax.Array) -> SolverState:
-    l = X.shape[0]
+                   y: jax.Array, key: jax.Array,
+                   rows: Optional[int] = None) -> SolverState:
+    # ``rows`` (static) is the TRUE corpus length when X/y carry zero-row
+    # padding (the sharded 'psum' placement pads so the corpus shards evenly
+    # across the mesh).  The sampler schedule runs over ``rows``; block
+    # starts are clamped to the true extent (matching the implicit
+    # dynamic_slice clamp an unpadded corpus gets) and the snapshot
+    # full-gradient masks the pad rows.  ``rows=None`` keeps the original
+    # program byte-for-byte — the bit-parity surface of the sharded
+    # 'gather' mode.
+    padded = rows is not None and rows != X.shape[0]
+    l = rows if rows is not None else X.shape[0]
     m = samplers.num_batches(l, batch_size)
 
     if _needs_snapshot(cfg.solver):
-        if cfg.solver == SAAG2:
+        data_only = cfg.solver == SAAG2
+        if padded:
+            fg = lambda w: problem.masked_full_grad(w, X, y, l,
+                                                    data_term_only=data_only)
+        elif data_only:
             fg = lambda w: problem.batch_grad_data(w, X, y)
         else:
             fg = lambda w: problem.full_grad(w, X, y)
@@ -261,6 +276,11 @@ def _run_one_epoch(problem: ERMProblem, cfg: SolverConfig, scheme: str,
     contiguous = scheme in (samplers.CYCLIC, samplers.SYSTEMATIC)
     if contiguous:
         starts = samplers.batch_slice_starts(scheme, key, l, batch_size)
+        if padded:
+            # the implicit dynamic_slice clamp now sits at the PADDED end;
+            # clamp to the true extent so the trailing batch reads the same
+            # rows an unpadded corpus would
+            starts = jnp.minimum(starts, l - batch_size)
     else:
         idx_mat = samplers.epoch_indices(scheme, key, l, batch_size)
 
@@ -408,7 +428,8 @@ def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig):
 
 
 def make_resident_epoch_fn(problem: ERMProblem, cfg: SolverConfig,
-                           scheme: str, batch_size: int):
+                           scheme: str, batch_size: int,
+                           rows: Optional[int] = None):
     """Fused host mode: ``(state, X, y, key) -> state`` with the WHOLE corpus
     resident on device (``PipelineConfig.resident``).
 
@@ -418,12 +439,21 @@ def make_resident_epoch_fn(problem: ERMProblem, cfg: SolverConfig,
     the driver credits the avoided restaging via
     ``AccessStats.record_h2d_saved``.  Snapshot solvers refresh their full
     gradient in the same device call.
+
+    ``rows`` is the true corpus length when the staged arrays are zero-row
+    padded (the sharded 'psum' placement); see :func:`_run_one_epoch`.
     """
     if cfg.sparse:
         raise ValueError(
             "resident mode stages a dense (l, n) corpus; CSR corpora keep "
             "the host-driven sparse epoch engine")
-    return partial(_run_one_epoch, problem, cfg, scheme, batch_size)
+    if rows is not None and cfg.use_fused:
+        raise ValueError(
+            "use_fused samples with the kernels' own end-of-corpus clamping, "
+            "which a padded (sharded 'psum') corpus would defeat — the "
+            "planner keeps sharded placements on the eager engines")
+    return partial(_run_one_epoch, problem, cfg, scheme, batch_size,
+                   rows=rows)
 
 
 def streaming_full_grad(problem: ERMProblem, w, batch_iter, *, data_term_only=False):

@@ -65,6 +65,10 @@ class AccessStats:
     h2d_s: float = 0.0       # time spent in host->device staging
     bytes_staged: int = 0
     h2d_saved_s: float = 0.0  # staging time AVOIDED by resident mode
+    shards: int = 1          # devices each staged chunk is split across
+    gather_s: float = 0.0    # device-to-device replication time (subset of
+    # h2d_s: the sharded 'gather' staging mode reshards chunks to replicated
+    # inside the staging thread; h2d_s - gather_s is the host-link time)
 
     def record(self, dt: float, nbytes: int):
         self.batches += 1
@@ -81,6 +85,11 @@ class AccessStats:
         one-time device copy made unnecessary."""
         self.h2d_saved_s += dt
 
+    def record_gather(self, dt: float):
+        """Sharded staging: time spent resharding staged chunks to
+        replicated (device-to-device, not the host link)."""
+        self.gather_s += dt
+
     @property
     def s_per_batch(self) -> float:
         return self.access_s / max(self.batches, 1)
@@ -96,6 +105,13 @@ class AccessStats:
     @property
     def read_mb_per_s(self) -> float:
         return self.bytes_read / 1e6 / max(self.access_s, 1e-12)
+
+    @property
+    def h2d_bytes_per_device(self) -> int:
+        """Host->device bytes each device received: staged chunks are split
+        ``shards`` ways on the batch axis, so the per-device link traffic is
+        the sharded fraction of the total."""
+        return self.bytes_staged // max(self.shards, 1)
 
 
 class PrefetchPipeline:
@@ -291,10 +307,39 @@ class DeviceStager:
     H2D time/bytes are recorded into ``stats`` (an :class:`AccessStats`)
     alongside the disk-access numbers, giving the benchmark its
     access/H2D/compute breakdown.
+
+    **Mesh-aware staging**: pass ``mesh=`` (and ``batch_axes=``, the logical
+    axes of each staged array, e.g. ``(None, "batch", None)`` for a
+    ``(K, b, n)`` chunk) instead of ``put`` and each chunk is placed as a
+    GLOBAL array sharded on its batch axis via
+    ``jax.make_array_from_process_local_data`` — every device receives only
+    its ``1/shards`` slice over the host link, and
+    ``stats.h2d_bytes_per_device`` reports the per-device traffic.  With
+    ``gather=True`` the shards are then resharded to replicated inside the
+    staging thread (``reduction='gather'`` mode: bit-identical consuming
+    arithmetic; the D2D time lands in ``stats.gather_s``).  The axis
+    resolution reuses :mod:`repro.distributed.sharding`; this module itself
+    stays numpy-only — jax still enters through the built ``put``.
     """
 
-    def __init__(self, source: Iterator, put, convert=None, depth: int = 2,
-                 stats: Optional[AccessStats] = None):
+    def __init__(self, source: Iterator, put=None, convert=None,
+                 depth: int = 2, stats: Optional[AccessStats] = None,
+                 mesh=None, batch_axes=None, gather: bool = False):
+        if put is None:
+            if mesh is None:
+                raise ValueError("DeviceStager needs either put= or mesh=")
+            if batch_axes is None:
+                raise ValueError(
+                    "mesh-aware staging needs batch_axes= (the logical axes "
+                    "of each staged array, e.g. (None, 'batch', None))")
+            from ..distributed.sharding import (data_parallel_width,
+                                                make_staging_put)
+            stats = stats if stats is not None else AccessStats()
+            put = make_staging_put(mesh, batch_axes, gather=gather,
+                                   stats=stats)
+            stats.shards = max(stats.shards, data_parallel_width(mesh))
+        elif mesh is not None:
+            raise ValueError("pass either put= or mesh=, not both")
         self.source = source
         self.put = put
         self.convert = convert or (lambda x: x)

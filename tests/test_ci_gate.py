@@ -1,0 +1,116 @@
+"""benchmarks/ci_gate.py: the tier-1 gate must parse real pytest summaries
+and fail safe.
+
+The inline workflow gate it replaces had two bugs this file pins down:
+``r"(\\d+) errors?"`` grepped the WHOLE output (matching counts in test
+names, warning text, or FAILED lines), and a run that crashed before
+printing a summary parsed as ``0 failed, 0 passed`` — a green build from a
+dead test run.
+"""
+import pytest
+
+from benchmarks.ci_gate import gate, main, parse_summary
+
+
+# ------------------------------------------------------------- parsing ----
+
+def test_parses_full_summary_line():
+    counts = parse_summary(
+        "....F..\nFAILED tests/test_x.py::test_y - AssertionError\n"
+        "23 failed, 371 passed, 2 skipped in 534.16s (0:08:54)\n")
+    assert counts["failed"] == 23
+    assert counts["passed"] == 371
+    assert counts["skipped"] == 2
+    assert counts["errors"] == 0
+
+
+def test_parses_pass_only_summary():
+    counts = parse_summary("371 passed in 10.00s\n")
+    assert counts == {"failed": 0, "passed": 371, "errors": 0}
+
+
+def test_parses_errors_summary():
+    counts = parse_summary("2 errors in 0.50s\n")
+    assert counts["errors"] == 2 and counts["passed"] == 0
+
+
+def test_parses_single_error_summary():
+    assert parse_summary("1 error in 0.10s\n")["errors"] == 1
+
+
+def test_strips_equals_rails():
+    counts = parse_summary(
+        "=========== 3 failed, 1 passed in 2.13s ===========\n")
+    assert counts["failed"] == 3 and counts["passed"] == 1
+
+
+def test_error_word_outside_summary_is_not_counted():
+    """The old gate's whole-output grep matched '2 errors' in arbitrary
+    text; only the summary line (count tokens + 'in N.NNs' tail) counts."""
+    out = ("FAILED tests/test_x.py::test_error_handling - saw 2 errors\n"
+           "tests/test_y.py::test_z PASSED\n"
+           "some log line: 7 errors were retried\n"
+           "3 passed in 1.00s\n")
+    counts = parse_summary(out)
+    assert counts["errors"] == 0 and counts["passed"] == 3
+
+
+def test_last_summary_line_wins():
+    out = "5 passed in 1.00s\n...rerun...\n1 failed, 4 passed in 1.20s\n"
+    counts = parse_summary(out)
+    assert counts["failed"] == 1 and counts["passed"] == 4
+
+
+def test_missing_summary_raises():
+    """pytest died before reporting — that must NOT parse as all-zero."""
+    with pytest.raises(ValueError, match="summary"):
+        parse_summary("Traceback (most recent call last):\n  boom\n")
+
+
+def test_empty_output_raises():
+    with pytest.raises(ValueError):
+        parse_summary("")
+
+
+def test_no_tests_ran_line_raises():
+    # "no tests ran in 0.01s" carries a timing tail but no count tokens
+    with pytest.raises(ValueError):
+        parse_summary("no tests ran in 0.01s\n")
+
+
+# --------------------------------------------------------------- gating ----
+
+def test_gate_ok_at_baseline():
+    ok, verdict = gate({"failed": 23, "passed": 371, "errors": 0}, 23, 350)
+    assert ok and "OK" in verdict
+
+
+def test_gate_fails_on_new_failure():
+    ok, _ = gate({"failed": 24, "passed": 371, "errors": 0}, 23, 350)
+    assert not ok
+
+
+def test_gate_fails_on_pass_regression():
+    ok, _ = gate({"failed": 23, "passed": 349, "errors": 0}, 23, 350)
+    assert not ok
+
+
+def test_gate_fails_on_any_error():
+    ok, _ = gate({"failed": 0, "passed": 400, "errors": 1}, 23, 350)
+    assert not ok
+
+
+# ------------------------------------------------------------------ CLI ----
+
+def test_main_exit_codes(tmp_path):
+    good = tmp_path / "good.out"
+    good.write_text("23 failed, 371 passed in 10.00s\n")
+    bad = tmp_path / "bad.out"
+    bad.write_text("30 failed, 371 passed in 10.00s\n")
+    dead = tmp_path / "dead.out"
+    dead.write_text("Traceback: interpreter exploded\n")
+    args = ["--max-failed", "23", "--min-passed", "350"]
+    assert main([str(good)] + args) == 0
+    assert main([str(bad)] + args) == 1
+    assert main([str(dead)] + args) == 2
+    assert main([str(tmp_path / "missing.out")] + args) == 2

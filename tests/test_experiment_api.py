@@ -19,9 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import (AUTO, EAGER, FUSED, RESIDENT, RESIDENT_EAGER,
-                       RESIDENT_FUSED, SPARSE_CSR, STREAMED, STREAMED_EAGER,
-                       DataSource, ExperimentSpec, PlanError, execute, plan)
+from repro.api import (AUTO, BACKENDS, EAGER, FUSED, RESIDENT,
+                       RESIDENT_EAGER, RESIDENT_FUSED, SHARDED_RESIDENT,
+                       SHARDED_STREAMED, SPARSE_CSR, STREAMED,
+                       STREAMED_EAGER, DataSource, ExperimentSpec, PlanError,
+                       execute, plan)
 from repro.core import samplers, solvers, synth_classification
 from repro.core.erm import ERMProblem
 from repro.core.solvers import SolverConfig
@@ -97,6 +99,23 @@ def test_planner_selects_documented_backend_per_cell(dense_corpus, csr_corpus,
     # sparse × resident: cannot run — rejected at plan time
     with pytest.raises(PlanError, match="resident"):
         plan(_spec(csr, solver=solver, scheme=scheme, placement=RESIDENT))
+
+
+def test_sharded_backends_are_first_class(dense_corpus):
+    """The sharded backends are part of the documented backend set, and a
+    mesh whose batch axes multiply to one device falls back to the
+    single-host backends (the sharded matrix itself lives in
+    tests/test_sharded_parity.py under the forced-device-count CI job)."""
+    assert SHARDED_STREAMED in BACKENDS and SHARDED_RESIDENT in BACKENDS
+    mesh1 = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    p = plan(_spec(DataSource.corpus(dense_corpus), mesh=mesh1))
+    assert p.backend in (STREAMED_EAGER, RESIDENT_EAGER, RESIDENT_FUSED)
+    assert p.shards == 1 and p.reduction is None
+
+
+def test_planner_rejects_reduction_without_mesh(dense_corpus):
+    with pytest.raises(PlanError, match="mesh"):
+        plan(_spec(DataSource.corpus(dense_corpus), reduction="psum"))
 
 
 def test_planner_auto_placement_small_corpus_is_resident(dense_corpus):

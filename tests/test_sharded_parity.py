@@ -1,0 +1,363 @@
+"""Sharded data-parallel backend: planner placement, bit parity, resume,
+per-device accounting.
+
+The full matrix needs a multi-device mesh, which on CPU comes from
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 pytest tests/test_sharded_parity.py
+
+(the ``multi-device`` CI job sets exactly that).  In a plain single-device
+run the mesh-dependent tests skip and only the planner-fallback /
+validation / accounting tests execute.
+
+The headline contract: under ``reduction='gather'`` (the default) the
+sharded backends stage chunks SPLIT across the mesh — per-device H2D
+traffic drops by the mesh width — then reshard to replicated at the jit
+boundary, so the per-device compute runs the byte-identical program the
+single-host backends compile, and the objective trajectory is
+BIT-IDENTICAL for every solver × sampling scheme.  ``reduction='psum'``
+additionally splits the compute (GSPMD partial gradients + all-reduce):
+deterministic for a fixed mesh, but its reduction order differs from the
+single-host circuit by ulps, so it is pinned by tolerance + determinism
+instead.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (GATHER, PSUM, RESIDENT, SHARDED_RESIDENT,
+                       SHARDED_STREAMED, STREAMED, DataSource,
+                       ExperimentSpec, PlanError, execute, plan)
+from repro.core import samplers, solvers
+from repro.data import dataset, pipeline
+
+NDEV = len(jax.devices())
+multi = pytest.mark.skipif(
+    NDEV < 8, reason="needs 8 devices: run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+# ROWS deliberately NOT divisible by the mesh width: the sharded placement
+# must zero-pad the resident corpus and still reproduce the single-host
+# trajectory (clamped trailing batch, masked objective in psum mode)
+ROWS, FEATS, B = 1001, 16, 64
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    path = tmp_path_factory.mktemp("sharded") / "dense.bin"
+    dataset.synth_erm_corpus(path, rows=ROWS, features=FEATS, seed=5)
+    return path
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    if NDEV < 8:
+        pytest.skip("needs 8 forced CPU devices")
+    return jax.make_mesh((8,), ("data",))
+
+
+def _spec(corpus, **kw):
+    kw.setdefault("step_size", 0.05)
+    kw.setdefault("batch_size", B)
+    kw.setdefault("epochs", 2)
+    return ExperimentSpec(data=DataSource.corpus(corpus), **kw)
+
+
+# ----------------------------------------------------------- planner ------
+
+def test_one_device_mesh_falls_back_to_single_host(corpus):
+    mesh1 = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    p = plan(_spec(corpus, mesh=mesh1, placement=STREAMED))
+    assert p.backend == "streamed-eager" and p.shards == 1
+    assert p.reduction is None
+    assert any("single-host" in w for w in p.why)
+
+
+def test_reduction_without_mesh_rejected(corpus):
+    with pytest.raises(PlanError, match="mesh"):
+        plan(_spec(corpus, reduction=PSUM))
+
+
+def test_forced_reduction_on_one_device_mesh_rejected(corpus):
+    """A forced reduction on a width-1 mesh must error, not silently run
+    single-host with reduction=None in the RunResult JSON."""
+    mesh1 = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    with pytest.raises(PlanError, match="1-device mesh"):
+        plan(_spec(corpus, mesh=mesh1, reduction=PSUM))
+
+
+@multi
+def test_multi_device_mesh_without_batch_axis_rejected(corpus, mesh8):
+    """8 devices under an axis name the batch rules don't map (no
+    'pod'/'data') cannot silently fall back to single-host — the user
+    asked for parallelism the mesh can't deliver."""
+    wrong = jax.make_mesh((8,), ("model",))
+    with pytest.raises(PlanError, match="batch-axis"):
+        plan(_spec(corpus, mesh=wrong))
+
+
+def test_unknown_reduction_rejected(corpus):
+    with pytest.raises(PlanError, match="reduction"):
+        plan(_spec(corpus, reduction="allreduce"))
+
+
+@multi
+def test_planner_selects_sharded_backends(corpus, mesh8):
+    st = plan(_spec(corpus, mesh=mesh8, placement=STREAMED))
+    assert st.backend == SHARDED_STREAMED
+    assert st.shards == 8 and st.reduction == GATHER
+    re_ = plan(_spec(corpus, mesh=mesh8, placement=RESIDENT))
+    assert re_.backend == SHARDED_RESIDENT
+    forced = plan(_spec(corpus, mesh=mesh8, reduction=PSUM))
+    assert forced.reduction == PSUM
+    assert any("forced" in w for w in forced.why)
+
+
+@multi
+def test_planner_rejects_unshardable_batch(corpus, mesh8):
+    with pytest.raises(PlanError, match="divis"):
+        plan(_spec(corpus, mesh=mesh8, batch_size=100))   # 100 % 8 != 0
+
+
+@multi
+def test_planner_rejects_fused_kernels_on_mesh(corpus, mesh8):
+    with pytest.raises(PlanError, match="fused"):
+        plan(_spec(corpus, mesh=mesh8, placement=RESIDENT, kernel="fused"))
+
+
+@multi
+def test_planner_rejects_sharded_csr(tmp_path_factory, mesh8):
+    from repro.data import sparse
+    path = tmp_path_factory.mktemp("sharded_csr") / "c.csr"
+    sparse.synth_sparse_classification(path, rows=256, features=64,
+                                       density=0.05, seed=1)
+    with pytest.raises(PlanError, match="CSR"):
+        plan(ExperimentSpec(data=DataSource.corpus(path), mesh=mesh8,
+                            batch_size=64))
+
+
+# ----------------------------------------------- bit parity (the matrix) ---
+
+def _run_pair(corpus, mesh, placement, **kw):
+    """(single-host result, sharded result) for otherwise-identical specs."""
+    base = _spec(corpus, placement=placement, **kw)
+    single = execute(plan(base))
+    sharded = execute(plan(dataclasses.replace(base, mesh=mesh)))
+    return single, sharded
+
+
+@multi
+@pytest.mark.parametrize("scheme", samplers.SCHEMES)
+@pytest.mark.parametrize("solver", solvers.SOLVERS)
+def test_gather_resident_trajectory_bit_identical(corpus, mesh8, solver,
+                                                  scheme):
+    """Acceptance contract: same spec on a 1-host and an 8-device mesh →
+    identical per-epoch objective trajectories, every solver × scheme."""
+    single, sharded = _run_pair(corpus, mesh8, RESIDENT,
+                                solver=solver, scheme=scheme)
+    assert sharded.plan.backend == SHARDED_RESIDENT
+    assert list(single.history) == list(sharded.history)
+    assert np.array_equal(single.w, sharded.w)
+
+
+@multi
+@pytest.mark.parametrize("scheme", samplers.SCHEMES)
+@pytest.mark.parametrize("solver", solvers.SOLVERS)
+def test_gather_streamed_trajectory_bit_identical(corpus, mesh8, solver,
+                                                  scheme):
+    single, sharded = _run_pair(corpus, mesh8, STREAMED,
+                                solver=solver, scheme=scheme)
+    assert sharded.plan.backend == SHARDED_STREAMED
+    assert list(single.history) == list(sharded.history)
+    assert np.array_equal(single.w, sharded.w)
+
+
+@multi
+@pytest.mark.parametrize("ls_mode", ["vectorized", "sequential"])
+def test_gather_parity_holds_under_line_search(corpus, mesh8, ls_mode):
+    """The step rule backtracks on batch objectives — a discrete accept
+    decision that any ulp drift would flip; gather mode keeps it exact."""
+    single, sharded = _run_pair(corpus, mesh8, RESIDENT, solver="mbsgd",
+                                scheme="systematic", step_mode="line_search",
+                                step_size=1.0, ls_mode=ls_mode)
+    assert list(single.history) == list(sharded.history)
+    assert np.array_equal(single.w, sharded.w)
+
+
+# ------------------------------------------------------------- psum --------
+
+@multi
+@pytest.mark.parametrize("placement", [STREAMED, RESIDENT])
+def test_psum_deterministic_and_close_to_single_host(corpus, mesh8,
+                                                     placement):
+    base = _spec(corpus, solver="svrg", scheme="systematic",
+                 placement=placement, mesh=mesh8, reduction=PSUM)
+    single = execute(plan(_spec(corpus, solver="svrg", scheme="systematic",
+                                placement=placement)))
+    a = execute(plan(base))
+    b = execute(plan(base))
+    # deterministic: same mesh, same spec → same bits
+    assert list(a.history) == list(b.history)
+    assert np.array_equal(a.w, b.w)
+    # tolerance vs the single-host circuit: GSPMD's partial-sum order
+    # differs by ulps per step, never more
+    np.testing.assert_allclose(a.w, single.w, rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(a.history, single.history, rtol=2e-4)
+
+
+# ------------------------------------------------------------ resume -------
+
+@multi
+@pytest.mark.parametrize("reduction", [GATHER, PSUM])
+def test_sharded_resume_round_trips(corpus, mesh8, reduction):
+    """Executing 4 epochs in two halves through execute(plan, resume=...)
+    reproduces the uninterrupted sharded run bit-for-bit."""
+    spec = _spec(corpus, solver="saga", scheme="random", epochs=4,
+                 mesh=mesh8, reduction=reduction, placement=RESIDENT)
+    p = plan(spec)
+    full = execute(p)
+    half = execute(p, epochs=2)
+    resumed = execute(p, resume=half, epochs=2)
+    assert resumed.epochs_done == 4
+    assert np.array_equal(full.w, resumed.w)
+    assert list(full.history)[2:] == list(resumed.history)
+
+
+@multi
+def test_sharded_streamed_resume_round_trips(corpus, mesh8):
+    spec = _spec(corpus, solver="svrg", scheme="cyclic", epochs=4,
+                 mesh=mesh8, placement=STREAMED)
+    p = plan(spec)
+    full = execute(p)
+    half = execute(p, epochs=2)
+    resumed = execute(p, resume=half, epochs=2)
+    assert np.array_equal(full.w, resumed.w)
+
+
+# ----------------------------------------------- per-device accounting -----
+
+@multi
+@pytest.mark.parametrize("placement", [STREAMED, RESIDENT])
+def test_per_device_h2d_accounting(corpus, mesh8, placement):
+    res = execute(plan(_spec(corpus, mesh=mesh8, placement=placement)))
+    st = res.stats
+    assert st.shards == 8
+    assert st.bytes_staged > 0
+    if placement == RESIDENT:
+        # pad rows (1001 → 1008 for even sharding) are a placement
+        # artifact and must NOT inflate the staged-bytes accounting —
+        # bytes_staged stays comparable with single-host rows
+        assert st.bytes_staged == ROWS * (FEATS + 1) * 4
+    assert st.h2d_bytes_per_device == st.bytes_staged // 8
+    assert st.gather_s >= 0.0            # D2D slice of the staging time
+    bd = res.breakdown()
+    assert bd["shards"] == 8
+    assert bd["h2d_mb_per_device"] == pytest.approx(
+        st.h2d_bytes_per_device / 1e6)
+    blob = res.to_json()
+    assert blob["plan"]["devices"] == 8
+    assert blob["plan"]["reduction"] == GATHER
+    assert blob["stats"]["h2d_bytes_per_device"] == st.h2d_bytes_per_device
+
+
+def test_single_host_breakdown_has_no_shard_columns(corpus):
+    res = execute(plan(_spec(corpus, placement=STREAMED, epochs=1)))
+    bd = res.breakdown()
+    assert "shards" not in bd and "h2d_mb_per_device" not in bd
+    assert res.to_json()["plan"]["devices"] == 1
+
+
+def test_access_stats_per_device_arithmetic():
+    st = pipeline.AccessStats()
+    st.record_h2d(0.1, 800)
+    assert st.h2d_bytes_per_device == 800      # default: one device
+    st.shards = 8
+    st.record_h2d(0.1, 800)
+    assert st.h2d_bytes_per_device == 1600 // 8
+    st.record_gather(0.05)
+    assert st.gather_s == pytest.approx(0.05)
+
+
+# ------------------------------------------------------ arrays source ------
+
+@multi
+def test_sharded_arrays_source_bit_identical(mesh8):
+    from repro.core import synth_classification
+    X, y, _ = synth_classification(jax.random.PRNGKey(3), 768, FEATS,
+                                   separation=2.0)
+    base = ExperimentSpec(data=DataSource.arrays(X, y), solver="sag",
+                          scheme="systematic", step_size=0.05,
+                          batch_size=B, epochs=2)
+    single = execute(plan(base))
+    sharded = execute(plan(dataclasses.replace(base, mesh=mesh8)))
+    assert sharded.plan.backend == SHARDED_RESIDENT
+    assert list(single.history) == list(sharded.history)
+    assert np.array_equal(single.w, sharded.w)
+
+
+# ---------------------------------------------------- DeviceStager mesh ----
+
+@multi
+def test_device_stager_mesh_staging(mesh8):
+    chunks = [(np.arange(8 * 4, dtype=np.float32).reshape(8, 4) + i,
+               np.full((8,), float(i), np.float32)) for i in range(3)]
+    stats = pipeline.AccessStats()
+    stager = pipeline.DeviceStager(
+        iter(chunks), mesh=mesh8, batch_axes=(("batch", None), ("batch",)),
+        stats=stats)
+    out = list(stager)
+    assert len(out) == 3 and stats.shards == 8
+    for i, (Xd, yd) in enumerate(out):
+        # staged as a GLOBAL array split 8 ways on the batch axis
+        assert len(Xd.sharding.device_set) == 8
+        assert not Xd.sharding.is_fully_replicated
+        np.testing.assert_array_equal(np.asarray(Xd), chunks[i][0])
+        np.testing.assert_array_equal(np.asarray(yd), chunks[i][1])
+    assert stats.staged == 3 and stats.gather_s == 0.0
+
+
+@multi
+def test_device_stager_mesh_gather_mode_replicates(mesh8):
+    chunks = [(np.ones((8, 4), np.float32),)]
+    stats = pipeline.AccessStats()
+    stager = pipeline.DeviceStager(iter(chunks), mesh=mesh8,
+                                   batch_axes=(("batch", None),),
+                                   gather=True, stats=stats)
+    (Xd,), = list(stager)
+    assert Xd.sharding.is_fully_replicated
+    assert stats.gather_s >= 0.0
+
+
+def test_device_stager_rejects_ambiguous_construction():
+    with pytest.raises(ValueError, match="put= or mesh="):
+        pipeline.DeviceStager(iter([]))
+    with pytest.raises(ValueError, match="batch_axes"):
+        pipeline.DeviceStager(iter([]), mesh=object())
+    with pytest.raises(ValueError, match="not both"):
+        pipeline.DeviceStager(iter([]), put=lambda x: x, mesh=object())
+
+
+# ------------------------------------------------- axis-resolution unit ----
+
+def test_data_parallel_width_degenerate_cases():
+    from repro.distributed.sharding import data_parallel_width
+    assert data_parallel_width(None) == 1
+    mesh1 = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    assert data_parallel_width(mesh1) == 1
+
+
+@multi
+def test_data_parallel_width_and_staging_shardings(mesh8):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import (data_parallel_width,
+                                            staging_shardings)
+    assert data_parallel_width(mesh8) == 8
+    sh = staging_shardings(mesh8, ((None, "batch", None), (None,)),
+                           ((4, 64, 16), (4,)))
+    assert sh[0].spec == P(None, "data", None)
+    assert sh[1].spec == P(None)
+    # a batch dim that does not divide the mesh replicates (adaptive rule)
+    sh2 = staging_shardings(mesh8, ((None, "batch", None),), ((4, 63, 16),))
+    assert sh2[0].spec == P(None, None, None)

@@ -1,5 +1,6 @@
 """Test helpers."""
 import os
+import re
 import subprocess
 import sys
 import textwrap
@@ -9,11 +10,19 @@ REPO = Path(__file__).resolve().parents[1]
 
 
 def run_py(code: str, devices: int = 1, env_extra=None, timeout=600):
-    """Run a python snippet in a subprocess with N fake XLA devices."""
+    """Run a python snippet in a subprocess with N fake XLA devices.
+
+    Any inherited ``--xla_force_host_platform_device_count`` is stripped
+    first: XLA honors the LAST occurrence, so under the multi-device CI job
+    (which exports the flag for the whole pytest run) a naive prepend would
+    silently override the count this helper was asked for.
+    """
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src")
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", "")).strip()
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
-                        + env.get("XLA_FLAGS", ""))
+                        + inherited)
     env.update(env_extra or {})
     return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                           capture_output=True, text=True, timeout=timeout,
