@@ -1,0 +1,268 @@
+"""SIGKILL fault-injection harness for the durable-run layer (CI).
+
+Each case runs REAL processes, because in-process tests cannot prove crash
+recovery — the victim must lose its Python heap:
+
+  1. reference — a child process runs the checkpointed plan to completion
+     uninterrupted;
+  2. victim    — a second child runs the SAME program; the parent SIGKILLs
+     it as soon as the first checkpoint commits (so the kill usually lands
+     mid-epoch-loop, with an async save possibly in flight);
+  3. survivor  — a third child restarts the program, which resumes via
+     ``repro.api.resume_from`` (no spec handed over — the plan is rebuilt
+     from the checkpoint's own fingerprint) and finishes the budget.
+
+The survivor's weights and cumulative objective trace must equal the
+reference BIT-FOR-BIT.  Modes:
+
+  basic    streamed + resident placements under CS (cyclic) and SS
+           (systematic) sampling, single device;
+  elastic  the victim runs a 'gather' sharded plan on an 8-device mesh;
+           the survivor restores the checkpoint onto a 4-device mesh and
+           must still land bitwise on the single-host trajectory;
+  sweep    ``benchmarks.run sweep --checkpoint-dir`` killed mid-grid, then
+           restarted: the grid JSON must complete with every cell at its
+           epoch budget.
+
+Prints the repo's ``name,us_per_call,derived`` CSV; exits nonzero on any
+parity failure.  Usage: ``python -m benchmarks.fault_injection
+[--mode basic|elastic|sweep|all]``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+
+CASE = """
+import numpy as np
+from pathlib import Path
+from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                       execute, plan, resume_from)
+from repro.data import dataset
+
+work = Path(r"{work}")
+corpus = Path(r"{corpus}")
+if not corpus.exists():
+    dataset.synth_erm_corpus(corpus, rows={rows}, features=24, seed=9)
+p = plan(ExperimentSpec(data=DataSource.corpus(corpus), solver="saga",
+                        scheme="{scheme}", step_size=0.05, batch_size=200,
+                        epochs={epochs}, placement="{placement}",
+                        checkpoint=CheckpointPolicy(work / "ckpt", every=1)))
+try:
+    res = resume_from(work / "ckpt")
+    print("RESUMED", res.epochs_done, flush=True)
+    p = res.plan
+except FileNotFoundError:
+    res = None
+remaining = {epochs} - (res.epochs_done if res else 0)
+r = execute(p, resume=res, epochs=remaining) if remaining else res
+np.save(work / "w.npy", np.asarray(r.w))
+np.save(work / "hist.npy", np.asarray(r.history))
+print("DONE", r.epochs_done, flush=True)
+"""
+
+ELASTIC = """
+import numpy as np
+from pathlib import Path
+import jax
+from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                       execute, plan, resume_from)
+from repro.data import dataset
+
+work = Path(r"{work}")
+corpus = Path(r"{corpus}")
+if not corpus.exists():
+    dataset.synth_erm_corpus(corpus, rows={rows}, features=24, seed=9)
+mesh = jax.make_mesh(({mesh},), ("data",)) if {mesh} > 1 else None
+p = plan(ExperimentSpec(data=DataSource.corpus(corpus), solver="saga",
+                        scheme="systematic", step_size=0.05, batch_size=200,
+                        epochs={epochs}, placement="resident", mesh=mesh,
+                        checkpoint=CheckpointPolicy(work / "ckpt", every=1)))
+try:
+    res = resume_from(work / "ckpt", p)
+    print("RESUMED", res.epochs_done, flush=True)
+    if {mesh} > 1:
+        assert res.solver_state.w.sharding.num_devices == {mesh}
+except FileNotFoundError:
+    res = None
+remaining = {epochs} - (res.epochs_done if res else 0)
+r = execute(p, resume=res, epochs=remaining) if remaining else res
+np.save(work / "w.npy", np.asarray(r.w))
+np.save(work / "hist.npy", np.asarray(r.history))
+print("DONE", r.epochs_done, flush=True)
+"""
+
+
+def _env(devices: int):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    # XLA honors the LAST flag occurrence: strip any inherited forced count
+    # (the multi-device CI job exports one for the whole run) before
+    # forcing the count this child was asked for
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", "")).strip()
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + inherited)
+    return env
+
+
+def _run(code: str, devices: int = 1, timeout: int = 900):
+    r = subprocess.run([sys.executable, "-c", code], env=_env(devices),
+                       cwd=REPO, capture_output=True, text=True,
+                       timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"child failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
+
+
+def _kill_after_first_checkpoint(code: str, ckpt: Path,
+                                 devices: int = 1) -> None:
+    proc = subprocess.Popen([sys.executable, "-c", code], env=_env(devices),
+                            cwd=REPO, stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    deadline = time.time() + 600
+    while time.time() < deadline:
+        if (ckpt / "LATEST").exists() or proc.poll() is not None:
+            break
+        time.sleep(0.05)
+    proc.kill()
+    proc.wait()
+
+
+def _resumed_at(stdout: str):
+    m = re.search(r"RESUMED (\d+)", stdout)
+    return int(m.group(1)) if m else None
+
+
+def case_basic(root: Path, placement: str, scheme: str, rows=6000,
+               epochs=30):
+    corpus = root / "corpus.bin"
+    fmt = dict(corpus=corpus, rows=rows, epochs=epochs,
+               placement=placement, scheme=scheme)
+    ref = root / f"ref_{placement}_{scheme}"
+    ref.mkdir(parents=True)
+    _run(CASE.format(work=ref, **fmt))
+
+    crash = root / f"crash_{placement}_{scheme}"
+    crash.mkdir()
+    _kill_after_first_checkpoint(CASE.format(work=crash, **fmt),
+                                 crash / "ckpt")
+    out = _run(CASE.format(work=crash, **fmt))
+    assert f"DONE {epochs}" in out, out
+    at = _resumed_at(out)
+    assert at is not None, "survivor did not resume from the checkpoint"
+    np.testing.assert_array_equal(np.load(ref / "w.npy"),
+                                  np.load(crash / "w.npy"))
+    np.testing.assert_array_equal(np.load(ref / "hist.npy"),
+                                  np.load(crash / "hist.npy"))
+    return f"resumed_at={at}/{epochs};bit_identical=True"
+
+
+def case_elastic(root: Path, rows=6000, epochs=12):
+    """8-device gather victim, 4-device survivor, single-host reference —
+    one trajectory across all three widths, bitwise."""
+    corpus = root / "corpus.bin"
+    fmt = dict(corpus=corpus, rows=rows, epochs=epochs)
+    ref = root / "ref_elastic"
+    ref.mkdir(parents=True)
+    _run(ELASTIC.format(work=ref, mesh=1, **fmt))
+
+    crash = root / "crash_elastic"
+    crash.mkdir()
+    _kill_after_first_checkpoint(ELASTIC.format(work=crash, mesh=8, **fmt),
+                                 crash / "ckpt", devices=8)
+    out = _run(ELASTIC.format(work=crash, mesh=4, **fmt), devices=4)
+    assert f"DONE {epochs}" in out, out
+    at = _resumed_at(out)
+    assert at is not None, "survivor did not resume from the checkpoint"
+    np.testing.assert_array_equal(np.load(ref / "w.npy"),
+                                  np.load(crash / "w.npy"))
+    np.testing.assert_array_equal(np.load(ref / "hist.npy"),
+                                  np.load(crash / "hist.npy"))
+    return f"mesh=8to4;resumed_at={at}/{epochs};bit_identical=True"
+
+
+def case_sweep(root: Path, rows=8192, epochs=6):
+    import json
+    ck = root / "sweep_ck"
+    out_json = root / "grid.json"
+    cmd = [sys.executable, "-m", "benchmarks.run", "sweep",
+           "--rows", str(rows), "--epochs", str(epochs),
+           "--checkpoint-dir", str(ck), "--json-out", str(out_json)]
+    proc = subprocess.Popen(cmd, env=_env(1), cwd=REPO,
+                            stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    deadline = time.time() + 600
+    while time.time() < deadline:
+        # kill once a couple of cells have committed snapshots — mid-grid
+        if len(list(ck.glob("cell_*/LATEST"))) >= 2 or proc.poll() is not None:
+            break
+        time.sleep(0.05)
+    proc.kill()
+    proc.wait()
+
+    r = subprocess.run(cmd, env=_env(1), cwd=REPO, capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    resumed = len(re.findall(r"# cell \d+ resumed", r.stdout))
+    d = json.loads(out_json.read_text())
+    assert all(row["epochs_done"] == row["epochs_budget"]
+               for row in d["results"]), d["results"]
+    assert resumed >= 1, "restart resumed no cell from its checkpoint"
+    return (f"cells={len(d['results'])};resumed_cells={resumed};"
+            f"grid_complete=True")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.fault_injection")
+    ap.add_argument("--mode", choices=("basic", "elastic", "sweep", "all"),
+                    default="all")
+    ap.add_argument("--workdir", type=str, default=None,
+                    help="scratch dir (default: a fresh tempdir)")
+    a = ap.parse_args(argv)
+    root = Path(a.workdir) if a.workdir else Path(tempfile.mkdtemp(
+        prefix="fault_injection_"))
+    root.mkdir(parents=True, exist_ok=True)
+
+    cases = []
+    if a.mode in ("basic", "all"):
+        # CS (cyclic) and SS (systematic) over both placements — the
+        # paper's deterministic schemes, where resume must be bitwise
+        cases += [(f"fault_kill_resume_{pl}_{sc}",
+                   lambda pl=pl, sc=sc: case_basic(root, pl, sc))
+                  for pl in ("streamed", "resident")
+                  for sc in ("cyclic", "systematic")]
+    if a.mode in ("elastic", "all"):
+        cases.append(("fault_elastic_8to4", lambda: case_elastic(root)))
+    if a.mode in ("sweep", "all"):
+        cases.append(("fault_sweep_kill_restart", lambda: case_sweep(root)))
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in cases:
+        t0 = time.perf_counter()
+        try:
+            derived = fn()
+        except Exception as e:  # keep running the matrix, fail at the end
+            failures.append((name, e))
+            derived = f"FAILED:{type(e).__name__}"
+        print(f"{name},{(time.perf_counter() - t0) * 1e6:.0f},{derived}",
+              flush=True)
+    if failures:
+        for name, e in failures:
+            print(f"# {name}: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -65,7 +65,7 @@ SECTIONS = []
 # ---------------------------------------------------------------------------
 
 def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
-              log=print):
+              checkpoint_dir=None, log=print):
     """Drive a grid of ``ExperimentSpec``s under a wall-clock budget.
 
     Cells advance ROUND-ROBIN, ``round_epochs`` at a time, resuming each
@@ -75,10 +75,37 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
     finished and stays resumable; with no budget the sweep runs every cell
     to its spec's epoch budget.  Returns ``[(spec, RunResult), ...]`` in
     grid order (cells that never got a turn carry ``None``).
-    """
-    from repro.api import execute, plan
 
+    ``checkpoint_dir`` makes the sweep CRASH-resumable, not just
+    budget-resumable: each cell checkpoints to ``<dir>/cell_<i>`` (a
+    :class:`~repro.checkpoint.CheckpointPolicy` attached to its spec), and
+    a restarted sweep over the same grid restores every cell from its
+    newest complete snapshot before granting any turns — a SIGKILL
+    mid-grid costs at most the epochs since each cell's last snapshot.
+    Cell directories are keyed by grid ORDER, so the restart must rebuild
+    the same grid (the fingerprint check rejects a reordered one).
+    """
+    import dataclasses
+    from pathlib import Path
+
+    from repro.api import CheckpointPolicy, execute, plan, resume_from
+
+    if checkpoint_dir is not None:
+        root = Path(checkpoint_dir)
+        grid = [dataclasses.replace(
+                    s, checkpoint=CheckpointPolicy(root / f"cell_{i:03d}"))
+                for i, s in enumerate(grid)]
     cells = [{"spec": s, "plan": plan(s), "result": None} for s in grid]
+    for i, c in enumerate(cells):
+        if c["spec"].checkpoint is None:
+            continue
+        try:
+            c["result"] = resume_from(c["spec"].checkpoint.directory,
+                                      c["plan"])
+        except FileNotFoundError:
+            continue            # fresh cell: no snapshot yet
+        log(f"# cell {i} resumed at epoch {c['result'].epochs_done}"
+            f"/{c['spec'].epochs}")
     t0 = time.perf_counter()
     exhausted = False
     progressed = True
@@ -134,14 +161,18 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
 
     if json_out:
         import json as jsonmod
-        from pathlib import Path
         import jax
+        from repro.checkpoint import atomic_write_text
         payload = {"meta": {"schema": 1, "budget_s": budget_s,
                             "round_epochs": round_epochs,
+                            "checkpoint_dir": (str(checkpoint_dir)
+                                               if checkpoint_dir else None),
                             "backend": jax.default_backend(),
                             "unit": "seconds per epoch"},
                    "results": results}
-        Path(json_out).write_text(jsonmod.dumps(payload, indent=2) + "\n")
+        # tmp + os.replace: a crash mid-write must leave the previous grid
+        # JSON intact, never a truncated one a restart would choke on
+        atomic_write_text(json_out, jsonmod.dumps(payload, indent=2) + "\n")
     return [(c["spec"], c["result"]) for c in cells]
 
 
@@ -179,11 +210,14 @@ def sweep_main(argv) -> None:
     ap.add_argument("--epochs", type=int, default=6,
                     help="epoch budget per cell")
     ap.add_argument("--json-out", type=str, default=None)
+    ap.add_argument("--checkpoint-dir", type=str, default=None,
+                    help="per-cell checkpoints under this dir; a restarted "
+                         "sweep (same grid) picks up mid-grid after a crash")
     a = ap.parse_args(argv)
     print("name,us_per_call,derived")
     run_sweep(demo_sweep_grid(rows=a.rows, epochs=a.epochs),
               budget_s=a.budget_s, round_epochs=a.round_epochs,
-              json_out=a.json_out)
+              json_out=a.json_out, checkpoint_dir=a.checkpoint_dir)
 
 
 def main() -> None:

@@ -14,12 +14,14 @@ it with :func:`execute` (or one-shot :func:`run_experiment`):
 See :mod:`repro.core.experiment` for the planner rules and the
 backend-selection matrix.
 """
+from .checkpoint.checkpointer import (  # noqa: F401
+    Checkpointer, CheckpointPolicy)
 from .core.experiment import (  # noqa: F401
     ARRAYS, AUTO, BACKENDS, CSR, DENSE, EAGER, FUSED, GATHER, LOSSES, PSUM,
     RESIDENT, RESIDENT_EAGER, RESIDENT_FUSED, SHARDED_RESIDENT,
     SHARDED_STREAMED, SPARSE_CSR, STREAMED, STREAMED_EAGER,
     DataSource, ExecutionPlan, ExperimentSpec, PlanError, RunResult,
-    execute, plan, run_experiment)
+    execute, plan, resume_from, run_experiment)
 from .core.samplers import CYCLIC, RANDOM, SCHEMES, SYSTEMATIC  # noqa: F401
 from .core.solvers import CONSTANT, LINE_SEARCH, SOLVERS  # noqa: F401
 from .core.step_rules import LS_MODES, SEQUENTIAL, VECTORIZED  # noqa: F401
@@ -32,6 +34,7 @@ __all__ = [
     "CYCLIC", "RANDOM", "SCHEMES", "SYSTEMATIC",
     "CONSTANT", "LINE_SEARCH", "SOLVERS",
     "LS_MODES", "SEQUENTIAL", "VECTORIZED",
+    "Checkpointer", "CheckpointPolicy",
     "DataSource", "ExecutionPlan", "ExperimentSpec", "PlanError",
-    "RunResult", "execute", "plan", "run_experiment",
+    "RunResult", "execute", "plan", "resume_from", "run_experiment",
 ]

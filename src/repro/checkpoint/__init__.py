@@ -1,0 +1,6 @@
+"""Durable-run layer: atomic, async, keep-k checkpoints with elastic
+(resharding) restore.  See :mod:`repro.checkpoint.checkpointer`."""
+from .checkpointer import (  # noqa: F401
+    Checkpointer, CheckpointPolicy, atomic_write_text)
+
+__all__ = ["Checkpointer", "CheckpointPolicy", "atomic_write_text"]

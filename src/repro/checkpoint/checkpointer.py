@@ -23,6 +23,7 @@ full arrays are written, which exercises the same code paths.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import re
@@ -36,6 +37,57 @@ import jax
 import numpy as np
 
 _LEAF_SEP = "."
+
+
+def atomic_write_text(path, text: str) -> Path:
+    """Write ``text`` to ``path`` via tmp-file + ``os.replace``.
+
+    A crash mid-write leaves either the old file or the new one, never a
+    truncated hybrid — the property every resumable-state JSON (sweep grids,
+    RunResult artifacts) needs to survive being the thing that crashed.
+    """
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.parent / f".tmp_{path.name}_{os.getpid()}"
+    tmp.write_text(text)
+    os.replace(tmp, path)
+    return path
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """How :func:`repro.core.experiment.execute` snapshots a run.
+
+    ``directory`` receives the :class:`Checkpointer` layout (one
+    ``step_<epochs_done>`` dir per snapshot plus the ``LATEST`` pointer);
+    ``every`` checkpoints each time the CUMULATIVE epoch count divides by it
+    (the final epoch of every ``execute`` call is always saved, so a
+    completed segment is resumable regardless of alignment); ``keep`` is the
+    GC depth; ``async_save`` overlaps the disk write with the next epoch
+    (the epoch loop only ever waits for the PREVIOUS write, never the
+    current one).
+    """
+    directory: Path
+    every: int = 1
+    keep: int = 3
+    async_save: bool = True
+
+    def __post_init__(self):
+        # normalize so a str-built policy compares equal to a Path-built one
+        # (spec equality is the resume guard's foundation)
+        object.__setattr__(self, "directory", Path(self.directory))
+
+    def validate(self) -> None:
+        if not str(self.directory):
+            raise ValueError("checkpoint.directory must be a usable path")
+        if self.every < 1:
+            raise ValueError(
+                f"checkpoint.every must be >= 1 epoch (got {self.every})")
+        if self.keep < 1:
+            raise ValueError(
+                f"checkpoint.keep must retain >= 1 snapshot (got "
+                f"{self.keep}) — keep=0 would GC the checkpoint a resume "
+                f"needs")
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -158,14 +210,43 @@ class Checkpointer:
                 out.append(int(m.group(1)))
         return sorted(out)
 
+    def _is_complete(self, step: int) -> bool:
+        """A step is restorable only if its manifest parses AND every leaf
+        file it indexes is still on disk — a half-deleted dir (interrupted
+        GC, partial rsync, manual cleanup) must not be selected."""
+        d = self.dir / f"step_{step:010d}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, ValueError):
+            return False
+        return all(entry is None or (d / entry["file"]).exists()
+                   for entry in manifest["index"].values())
+
     def latest_step(self) -> Optional[int]:
+        """Newest restorable step: the ``LATEST`` pointer when its target is
+        complete, else the newest step whose manifest AND leaf files all
+        exist (the pointer's target may be half-deleted — see
+        :meth:`_is_complete`)."""
         ptr = self.dir / "LATEST"
         if ptr.exists():
             m = re.match(r"step_(\d+)$", ptr.read_text().strip())
-            if m and (self.dir / ptr.read_text().strip() / "manifest.json").exists():
+            if m and self._is_complete(int(m.group(1))):
                 return int(m.group(1))
-        steps = self.all_steps()
-        return steps[-1] if steps else None
+        for s in reversed(self.all_steps()):
+            if self._is_complete(s):
+                return s
+        return None
+
+    def read_meta(self, step: Optional[int] = None) -> Tuple[int, Dict]:
+        """(step, meta) WITHOUT loading any leaf arrays — the cheap probe
+        :func:`repro.core.experiment.resume_from` validates a plan against
+        before paying for the restore."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        return step, manifest["meta"]
 
     def restore(self, template, step: Optional[int] = None,
                 shardings=None) -> Tuple[Any, Dict]:

@@ -50,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from ..checkpoint.checkpointer import (Checkpointer, CheckpointPolicy,
+                                       atomic_write_text)
 from ..distributed.sharding import data_parallel_width, make_staging_put
 from . import samplers
 from .erm import ERMProblem, LOGISTIC, SMOOTH_HINGE, SQUARE
@@ -176,6 +178,13 @@ class ExperimentSpec:
     # differs from the single-host circuit by ulps.
     mesh: Optional[Mesh] = None
     reduction: str = AUTO               # AUTO | GATHER | PSUM
+    # durability: a CheckpointPolicy makes execute() snapshot the full run
+    # state (solver pytree + sampler (seed, step) + AccessStats + objective
+    # trace) every `policy.every` cumulative epochs, asynchronously — the
+    # epoch loop never waits on the disk write.  repro.api.resume_from(dir)
+    # reconstructs a resumable RunResult after a crash, including ELASTIC
+    # restore of a 'gather'-mode sharded run onto a different mesh width.
+    checkpoint: Optional[CheckpointPolicy] = None
 
     @property
     def problem(self) -> ERMProblem:
@@ -345,6 +354,15 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
             "it needs mesh= (leave it 'auto' for single-host runs)")
     if spec.batch_size <= 0 or spec.epochs <= 0:
         raise PlanError("batch_size and epochs must be positive")
+    if spec.checkpoint is not None:
+        if not isinstance(spec.checkpoint, CheckpointPolicy):
+            raise PlanError(
+                f"checkpoint= wants a repro.checkpoint.CheckpointPolicy, "
+                f"got {type(spec.checkpoint).__name__}")
+        try:
+            spec.checkpoint.validate()
+        except ValueError as e:
+            raise PlanError(str(e)) from e
 
     probe = _probe(spec.data)
     if spec.batch_size > probe.rows:
@@ -501,6 +519,11 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
                        "while_loop reference)")
         else:
             why.append(f"ls_mode {ls_mode!r} forced by spec")
+    if spec.checkpoint is not None:
+        pol = spec.checkpoint
+        why.append(f"durable run: checkpoint every {pol.every} epoch(s) to "
+                   f"{pol.directory} (keep {pol.keep}, "
+                   f"{'async' if pol.async_save else 'blocking'} saves)")
     cfg = SolverConfig(solver=spec.solver, step_mode=spec.step_mode,
                        step_size=step_size, ls_shrink=spec.ls_shrink,
                        ls_c=spec.ls_c, ls_max_iter=spec.ls_max_iter,
@@ -551,11 +574,17 @@ def _auto_step_size(spec: ExperimentSpec, probe: _Probe) -> float:
 class RunResult:
     """Uniform outcome of :func:`execute` across every backend.
 
-    ``history`` is the per-epoch objective trace (empty when
-    ``spec.record_objective`` is off — ``objective`` is always the final
-    full-corpus value).  ``solver_state``/``sampler_state`` resume the run:
-    pass the result back as ``execute(plan, resume=result)`` and the batch
-    schedule continues exactly where an uninterrupted run would be.
+    ``history`` is the CUMULATIVE per-epoch objective trace: a resumed call
+    prepends the trace the ``resume`` result carried, so after any chain of
+    ``execute(plan, resume=prev)`` segments (in-memory or reconstructed
+    from disk by :func:`resume_from`) it reads exactly like one
+    uninterrupted run's.  Empty when ``spec.record_objective`` is off —
+    ``objective`` is always the final full-corpus value.
+    ``solver_state``/``sampler_state`` resume the run: pass the result back
+    as ``execute(plan, resume=result)`` and the batch schedule continues
+    exactly where an uninterrupted run would be.  (``solver_state`` is
+    ``None`` on results rebuilt by :meth:`from_json` — JSON carries the
+    summary surface; on-disk checkpoints carry resumable state.)
     """
     plan: ExecutionPlan
     objective: float
@@ -599,10 +628,13 @@ class RunResult:
 
     def to_json(self) -> Dict:
         """JSON-safe summary (the CI artifact schema) — resumable state is
-        the sampler side only; the solver pytree stays in memory."""
+        the sampler side only; the solver pytree stays in memory (or on
+        disk, when the spec carries a :class:`CheckpointPolicy`).  Schema 2
+        adds ``w``/``train_s``/``compute_s`` so :meth:`from_json` can
+        rebuild the full summary surface, per-device stats included."""
         p = self.plan
         return {
-            "schema": 1,
+            "schema": 2,
             "backend": p.backend,
             "plan": {"placement": p.placement, "kernel": p.kernel,
                      "format": p.fmt, "solver": p.cfg.solver,
@@ -619,8 +651,11 @@ class RunResult:
             "epochs_done": self.epochs_done,
             "objective": self.objective,
             "history": [float(h) for h in self.history],
+            "w": [float(v) for v in self.w],
             "w_norm": float(np.linalg.norm(self.w)),
             "sampler_state": self.sampler_state,
+            "train_s": self.train_s,
+            "compute_s": self.compute_s,
             "breakdown": self.breakdown(),
             "stats": {**dataclasses.asdict(self.stats),
                       "h2d_bytes_per_device":
@@ -628,10 +663,192 @@ class RunResult:
         }
 
     def save_json(self, path) -> Path:
-        path = Path(path)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(self.to_json(), indent=2) + "\n")
-        return path
+        """Write :meth:`to_json` atomically (tmp + ``os.replace``): a crash
+        mid-write can never leave a truncated artifact that poisons a later
+        reader."""
+        return atomic_write_text(path,
+                                 json.dumps(self.to_json(), indent=2) + "\n")
+
+    @staticmethod
+    def from_json(source, plan_: "ExecutionPlan") -> "RunResult":
+        """Rebuild the JSON surface of a saved result against ``plan_``.
+
+        The returned result reproduces :meth:`to_json` bit-for-bit —
+        objective trace, weights, wall-clock, and the per-device access
+        stats of sharded runs included — but carries ``solver_state=None``:
+        the solver pytree is not in the JSON, so it supports every summary
+        consumer while ``execute(resume=)`` rejects it (reconstruct
+        resumable state from a checkpoint via :func:`resume_from`).
+        """
+        d = source
+        if not isinstance(d, dict):
+            d = json.loads(Path(source).read_text())
+        want = {"backend": plan_.backend, "solver": plan_.cfg.solver,
+                "scheme": plan_.spec.scheme, "rows": plan_.rows,
+                "devices": plan_.shards}
+        got = {"backend": d["backend"], "solver": d["plan"]["solver"],
+               "scheme": d["plan"]["scheme"], "rows": d["plan"]["rows"],
+               "devices": d["plan"]["devices"]}
+        if want != got:
+            bad = [f"{k}: json {got[k]!r} != plan {want[k]!r}"
+                   for k in want if got[k] != want[k]]
+            raise ValueError("saved RunResult JSON does not describe this "
+                             "plan; differing fields:\n  " + "\n  ".join(bad))
+        from ..data import pipeline as pipemod
+        fields = {f.name for f in dataclasses.fields(pipemod.AccessStats)}
+        stats = pipemod.AccessStats(**{k: v for k, v in d["stats"].items()
+                                       if k in fields})
+        return RunResult(
+            plan=plan_, objective=d["objective"],
+            history=np.asarray(d["history"]),
+            w=np.asarray(d["w"], np.float32), solver_state=None,
+            sampler_state=d["sampler_state"],
+            epochs_run=d["epochs_run"],
+            epochs_done=d["epochs_done"], stats=stats,
+            train_s=d["train_s"], compute_s=d["compute_s"])
+
+
+# ---------------------------------------------------------------------------
+# plan identity: what a resume / restore must match
+# ---------------------------------------------------------------------------
+
+# STRICT fields pin the trajectory arithmetic and the batch schedule — a
+# checkpoint restored under a different value of any of these would not
+# continue the same run.  ELASTIC fields may change across a restart: the
+# mesh width / reduction family (within the bit-identical gather ∪
+# single-host family), the chunk shape, and the epoch budget reshape HOW
+# the same trajectory executes, not WHAT it computes.
+_FP_STRICT = ("solver", "scheme", "loss", "reg", "seed", "batch_size",
+              "step_mode", "step_size", "ls_mode", "ls_shrink", "ls_c",
+              "ls_max_iter", "record_objective", "data", "fmt", "rows",
+              "features", "num_batches", "placement", "kernel")
+_FP_ELASTIC = ("backend", "chunk", "shards", "reduction", "epochs")
+
+
+def _plan_fingerprint(p: ExecutionPlan) -> Dict:
+    """JSON-safe identity of a plan, stored in every checkpoint's meta and
+    validated by :func:`resume_from` before any array is loaded."""
+    s = p.spec
+    return {
+        "solver": p.cfg.solver, "scheme": s.scheme, "loss": s.loss,
+        "reg": s.reg, "seed": s.seed, "batch_size": s.batch_size,
+        "step_mode": p.cfg.step_mode, "step_size": p.cfg.step_size,
+        "ls_mode": p.cfg.ls_mode, "ls_shrink": p.cfg.ls_shrink,
+        "ls_c": p.cfg.ls_c, "ls_max_iter": p.cfg.ls_max_iter,
+        "record_objective": s.record_objective,
+        "data": str(s.data.path) if s.data.path is not None else None,
+        "fmt": p.fmt, "rows": p.rows, "features": p.features,
+        "num_batches": p.num_batches, "placement": p.placement,
+        "kernel": p.kernel,
+        "backend": p.backend, "chunk": p.chunk, "shards": p.shards,
+        "reduction": p.reduction, "epochs": s.epochs,
+    }
+
+
+def _validate_fingerprint(saved: Dict, plan_: ExecutionPlan) -> None:
+    """Field-by-field check that a checkpoint belongs to ``plan_``.
+
+    Strict fields must match exactly.  'psum' reduction additionally pins
+    ``shards``/``reduction``/``backend``: its per-device partial-gradient
+    combine is deterministic PER MESH, so a psum trajectory cannot continue
+    on a different width (the gather ∪ single-host family is bit-identical
+    across widths and restores elastically).
+    """
+    cur = _plan_fingerprint(plan_)
+    bad = [f"{k}: checkpoint {saved.get(k)!r} != plan {cur[k]!r}"
+           for k in _FP_STRICT if saved.get(k) != cur[k]]
+    if PSUM in (saved.get("reduction"), cur["reduction"]):
+        bad += [f"{k}: checkpoint {saved.get(k)!r} != plan {cur[k]!r} "
+                f"(reduction='psum' pins the mesh)"
+                for k in ("shards", "reduction", "backend")
+                if saved.get(k) != cur[k]]
+    if bad:
+        raise ValueError(
+            "checkpoint does not belong to this plan — a restored run must "
+            "continue the SAME plan (mesh width, gather/single-host "
+            "reduction, chunking and epoch budget may change; everything "
+            "else pins the trajectory); differing fields:\n  "
+            + "\n  ".join(bad))
+
+
+def _fmt_mesh(m: Optional[Mesh]) -> Optional[str]:
+    if m is None:
+        return None
+    return "Mesh(" + ", ".join(f"{n}={s}" for n, s in
+                               zip(m.axis_names, m.devices.shape)) + ")"
+
+
+def _plan_diff(a: ExecutionPlan, b: ExecutionPlan) -> List[str]:
+    """Human-readable field-by-field differences between two plans, for
+    the ``execute(resume=)`` rejection message — naming WHICH fields
+    diverged beats re-deriving them from two plan reprs."""
+    diffs = []
+    for f in dataclasses.fields(ExperimentSpec):
+        va, vb = getattr(a.spec, f.name), getattr(b.spec, f.name)
+        if va != vb:
+            if f.name == "mesh":
+                va, vb = _fmt_mesh(va), _fmt_mesh(vb)
+            diffs.append(f"spec.{f.name}: resume {va!r} != plan {vb!r}")
+    for name in ("backend", "placement", "kernel", "fmt", "rows",
+                 "features", "num_batches", "chunk", "shards", "reduction"):
+        va, vb = getattr(a, name), getattr(b, name)
+        if va != vb:
+            diffs.append(f"plan.{name}: resume {va!r} != plan {vb!r}")
+    for name in SolverConfig._fields:
+        va, vb = getattr(a.cfg, name), getattr(b.cfg, name)
+        if va != vb:
+            diffs.append(f"cfg.{name}: resume {va!r} != plan {vb!r}")
+    return diffs
+
+
+class _RunCheckpointer:
+    """Bridges an epoch loop to the :class:`Checkpointer`.
+
+    Owns the cadence (every ``policy.every`` CUMULATIVE epochs, plus always
+    the final epoch of the call, so a completed segment is resumable
+    regardless of alignment) and packages the full resumable surface into
+    each snapshot's meta: sampler state, cumulative objective trace,
+    :class:`AccessStats` and the plan fingerprint.  The solver pytree is
+    the checkpoint's array payload.  ``after_epoch`` runs OUTSIDE the
+    timers: the host snapshot is synchronous (it must complete before the
+    next epoch donates the state buffers), the disk write overlaps the
+    next epoch when the policy is async.
+    """
+
+    def __init__(self, plan_: ExecutionPlan, done0: int, epochs: int):
+        self.pol = plan_.spec.checkpoint
+        self.ck = (Checkpointer(self.pol.directory, keep=self.pol.keep,
+                                async_save=self.pol.async_save)
+                   if self.pol is not None else None)
+        self.plan = plan_
+        self.done0 = done0
+        self.epochs = epochs
+
+    def after_epoch(self, e: int, state: SolverState, sampler_state: Dict,
+                    history: List[float], stats) -> None:
+        if self.ck is None:
+            return
+        done = self.done0 + e + 1
+        if done % self.pol.every and e + 1 < self.epochs:
+            return
+        meta = {
+            "schema": 1,
+            "epochs_done": done,
+            "sampler_state": sampler_state,
+            "history": [float(h) for h in history],
+            "objective": float(history[-1]) if history else None,
+            "plan": _plan_fingerprint(self.plan),
+            "policy": {"every": self.pol.every, "keep": self.pol.keep,
+                       "async_save": self.pol.async_save},
+            "stats": dataclasses.asdict(stats),
+        }
+        self.ck.save(done, state, meta)
+
+    def finish(self) -> None:
+        # a crashed async write surfaces HERE, not silently — the run must
+        # not report durable state it failed to persist
+        if self.ck is not None:
+            self.ck.wait()
 
 
 # ---------------------------------------------------------------------------
@@ -648,6 +865,12 @@ def execute(plan_: ExecutionPlan, *, resume: Optional[RunResult] = None,
     """
     epochs = plan_.spec.epochs if epochs is None else epochs
     if resume is not None:
+        if resume.solver_state is None:
+            raise ValueError(
+                "resume result carries no solver state (RunResult.from_json "
+                "rebuilds the summary surface only) — reconstruct resumable "
+                "state from an on-disk checkpoint via "
+                "repro.api.resume_from(directory)")
         prev, cur = resume.plan.spec.data, plan_.spec.data
         # DataSource equality deliberately excludes array payloads (specs
         # stay hashable), so in-memory sources additionally require the
@@ -655,16 +878,30 @@ def execute(plan_: ExecutionPlan, *, resume: Optional[RunResult] = None,
         # data would silently corrupt the run
         same_arrays = (prev.kind != ARRAYS
                        or (prev.X is cur.X and prev.y is cur.y))
-        if resume.plan != plan_ or not same_arrays:
+        # identity is the RESOLVED trajectory (fingerprint + psum rule),
+        # not raw spec equality: a plan rebuilt from a checkpoint's
+        # fingerprint forces fields the original spec left 'auto', and the
+        # elastic fields (mesh width, chunking, epoch budget) may change
+        # across a restart
+        try:
+            _validate_fingerprint(_plan_fingerprint(resume.plan), plan_)
+            same_run = True
+        except ValueError:
+            same_run = False
+        if not same_run or not same_arrays:
+            diffs = _plan_diff(resume.plan, plan_)
+            if not same_arrays:
+                diffs.append("spec.data: in-memory sources must be the "
+                             "same arrays (X/y object identity)")
             raise ValueError(
-                f"resume result came from a different plan "
-                f"(backend {resume.plan.backend!r}, solver "
-                f"{resume.plan.cfg.solver!r}, seed {resume.plan.spec.seed}) "
-                f"than the one being executed ({plan_.backend!r}, "
-                f"{plan_.cfg.solver!r}, seed {plan_.spec.seed}) — a resumed "
-                f"run must continue the SAME plan (and, for in-memory "
-                f"sources, the same arrays) or the batch schedule silently "
-                f"diverges from an uninterrupted run")
+                "resume result came from a different plan than the one "
+                "being executed — a resumed run must continue the SAME "
+                "plan (and, for in-memory sources, the same arrays) or the "
+                "batch schedule silently diverges from an uninterrupted "
+                "run; differing fields:\n  "
+                + "\n  ".join(diffs
+                              or ["(plans compare unequal with no "
+                                  "field-level difference)"]))
     if plan_.placement == RESIDENT:
         return _execute_resident(plan_, resume, epochs)
     return _execute_streamed(plan_, resume, epochs)
@@ -826,29 +1063,42 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
     for _ in range(done0):
         key, _ = jax.random.split(key)
 
+    # the trace is cumulative across resumes: prepending the resumed-from
+    # history makes any chain of segments read like one uninterrupted run
+    prefix = [] if resume is None else [float(h) for h in resume.history]
     history: List[float] = []
     compute_s = 0.0
     train_s = 0.0
-    for e in range(epochs):
-        key, sub = jax.random.split(key)
-        tc = time.perf_counter()
-        state = epoch_fn(state, X, y, sub)
-        jax.block_until_ready(state.w)
-        dt = time.perf_counter() - tc
-        compute_s += dt
-        train_s += dt
-        if spec.data.kind != ARRAYS and e > 0:
-            # every epoch after the first of THIS call would have restaged
-            # the corpus (a resumed call pays its own staging, so its first
-            # epoch saved nothing — crediting per-call keeps split runs'
-            # totals consistent with their actual staging count)
-            stats.record_h2d_saved(h2d_dt)
-        if spec.record_objective:
-            history.append(float(obj(state.w)))     # outside the timers
+    rck = _RunCheckpointer(plan_, done0, epochs)
+    try:
+        for e in range(epochs):
+            key, sub = jax.random.split(key)
+            tc = time.perf_counter()
+            state = epoch_fn(state, X, y, sub)
+            jax.block_until_ready(state.w)
+            dt = time.perf_counter() - tc
+            compute_s += dt
+            train_s += dt
+            if spec.data.kind != ARRAYS and e > 0:
+                # every epoch after the first of THIS call would have
+                # restaged the corpus (a resumed call pays its own staging,
+                # so its first epoch saved nothing — crediting per-call
+                # keeps split runs' totals consistent with their actual
+                # staging count)
+                stats.record_h2d_saved(h2d_dt)
+            if spec.record_objective:
+                history.append(float(obj(state.w)))     # outside the timers
+            rck.after_epoch(e, state,
+                            {"scheme": spec.scheme, "seed": spec.seed,
+                             "epochs": done0 + e + 1},
+                            prefix + history, stats)
+    finally:
+        rck.finish()
 
     objective = history[-1] if history else float(obj(state.w))
     return RunResult(
-        plan=plan_, objective=objective, history=np.asarray(history),
+        plan=plan_, objective=objective,
+        history=np.asarray(prefix + history),
         w=np.asarray(state.w), solver_state=state,
         sampler_state={"scheme": spec.scheme, "seed": spec.seed,
                        "epochs": done0 + epochs},
@@ -981,19 +1231,33 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
             # gradient would make the donated epoch call re-specialize
             return jax.device_put(st, rep) if sharded else st
 
-    state, history, compute_s, train_s = _drive_chunked(
-        pipe, epoch_fn, state, m=m, K=K, epochs=epochs,
-        start_step=start_step, alloc=alloc, fill=fill,
-        snapshot_begin=snapshot_begin, eval_fn=eval_fn,
-        mesh=spec.mesh if sharded else None, batch_axes=batch_axes,
-        gather=bool(gather))
+    # cumulative trace across resumes, as in the resident path
+    prefix = [] if resume is None else [float(h) for h in resume.history]
+    rck = _RunCheckpointer(plan_, done0, epochs)
+
+    def on_epoch(e, st, hist):
+        # deterministic count of CONSUMED batches — the prefetch producer
+        # may have advanced the live sampler a few steps further
+        rck.after_epoch(e, st,
+                        {"scheme": spec.scheme, "seed": spec.seed,
+                         "step": start_step + m * (e + 1)},
+                        prefix + hist, pipe.stats)
+
+    try:
+        state, history, compute_s, train_s = _drive_chunked(
+            pipe, epoch_fn, state, m=m, K=K, epochs=epochs,
+            start_step=start_step, alloc=alloc, fill=fill,
+            snapshot_begin=snapshot_begin, eval_fn=eval_fn,
+            mesh=spec.mesh if sharded else None, batch_axes=batch_axes,
+            gather=bool(gather), on_epoch=on_epoch)
+    finally:
+        rck.finish()
 
     objective = history[-1] if history else eval_obj(host_w(state.w))
     return RunResult(
-        plan=plan_, objective=objective, history=np.asarray(history),
+        plan=plan_, objective=objective,
+        history=np.asarray(prefix + history),
         w=np.asarray(state.w), solver_state=state,
-        # deterministic count of CONSUMED batches — the prefetch producer
-        # may have advanced the live sampler a few steps further
         sampler_state={"scheme": spec.scheme, "seed": spec.seed,
                        "step": start_step + m * epochs},
         epochs_run=epochs, epochs_done=done0 + epochs, stats=pipe.stats,
@@ -1005,6 +1269,7 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
                    snapshot_begin: Optional[Callable],
                    eval_fn: Optional[Callable], mesh: Optional[Mesh] = None,
                    batch_axes=None, gather: bool = False,
+                   on_epoch: Optional[Callable] = None,
                    ) -> Tuple[SolverState, List[float], float, float]:
     """The shared streaming engine under the dense and sparse backends:
     group the pipeline's batch stream into <=K-batch chunks (never crossing
@@ -1015,8 +1280,9 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
     ``alloc(k)`` builds contiguous host staging buffers for a k-batch chunk
     (batches are written straight in — one copy, not stack-then-slice);
     ``fill(bufs, i, batch)`` writes batch i; ``eval_fn(w)`` is the per-epoch
-    objective probe, run OUTSIDE the timers.  Returns
-    (state, history, compute_s, train_s).
+    objective probe, run OUTSIDE the timers; ``on_epoch(e, state, history)``
+    is the checkpoint hook, also untimed, called at every epoch boundary.
+    Returns (state, history, compute_s, train_s).
     """
     from ..data import pipeline as pipemod
 
@@ -1053,7 +1319,7 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
     compute_s = 0.0
     train_s = 0.0
     try:
-        for _ in range(epochs):
+        for e in range(epochs):
             te = time.perf_counter()
             if snapshot_begin is not None:
                 state = snapshot_begin(state)
@@ -1068,6 +1334,8 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
             train_s += time.perf_counter() - te
             if eval_fn is not None:
                 history.append(float(eval_fn(state.w)))   # untimed
+            if on_epoch is not None:
+                on_epoch(e, state, history)               # untimed
     finally:
         stager.close()
         pipe.close()
@@ -1076,3 +1344,96 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
 
 def _put_blocking(host):
     return jax.block_until_ready(tuple(jax.device_put(a) for a in host))
+
+
+# ---------------------------------------------------------------------------
+# durable-run restore
+# ---------------------------------------------------------------------------
+
+def _plan_from_fingerprint(saved: Dict, directory: Path,
+                           meta: Dict) -> ExecutionPlan:
+    """Rebuild a runnable plan from a checkpoint's own fingerprint — the
+    ``resume_from(dir)`` no-spec path after a crash took the process (and
+    its in-memory spec) with it.  Every planner choice the fingerprint
+    resolved (placement, kernel, step size, ls mode, chunk) is FORCED so
+    the rebuilt plan cannot re-plan differently on different hardware; the
+    mesh is not rebuilt — pass an explicit plan to continue sharded.
+    """
+    if saved.get("data") is None:
+        raise ValueError(
+            "checkpoint was taken from an in-memory arrays source, which "
+            "has no path to reopen — pass the plan explicitly: "
+            "resume_from(directory, plan(spec))")
+    pol = meta.get("policy", {})
+    spec = ExperimentSpec(
+        data=DataSource.corpus(saved["data"]),
+        loss=saved["loss"], reg=saved["reg"],
+        solver=saved["solver"], scheme=saved["scheme"],
+        step_mode=saved["step_mode"], step_size=saved["step_size"],
+        ls_mode=saved["ls_mode"], ls_shrink=saved["ls_shrink"],
+        ls_c=saved["ls_c"], ls_max_iter=saved["ls_max_iter"],
+        batch_size=saved["batch_size"], epochs=saved["epochs"],
+        seed=saved["seed"], record_objective=saved["record_objective"],
+        placement=saved["placement"], kernel=saved["kernel"],
+        chunk=saved["chunk"],
+        checkpoint=CheckpointPolicy(directory, **pol))
+    return plan(spec)
+
+
+def resume_from(directory, plan_: Optional[ExecutionPlan] = None, *,
+                step: Optional[int] = None) -> RunResult:
+    """Reconstruct a resumable :class:`RunResult` from an on-disk
+    checkpoint directory — the crash-recovery entry point.
+
+    With ``plan_=None`` the plan itself is rebuilt from the checkpoint's
+    fingerprint (corpus-backed, single-host — the common restart) and is
+    available as ``result.plan``.  Passing an explicit ``plan_`` validates
+    the checkpoint against it field by field and enables ELASTIC restore:
+    a ``reduction='gather'`` sharded checkpoint restores onto a plan with
+    a different mesh width — or none — because that whole family is
+    bit-identical; ``'psum'`` checkpoints are mesh-pinned and only restore
+    onto the identical mesh.  ``step`` picks a specific snapshot (default:
+    newest COMPLETE one; a half-deleted step dir is skipped).
+
+    The returned result carries the restored solver pytree, the exact
+    two-integer sampler state, and the cumulative objective trace — pass
+    it straight back: ``execute(result.plan, resume=result)``.
+    """
+    directory = Path(directory)
+    if not directory.exists():
+        # Checkpointer.__init__ would mkdir it — probe BEFORE constructing
+        # so a typo'd path fails loudly instead of materializing
+        raise FileNotFoundError(f"no checkpoint directory at {directory}")
+    ck = Checkpointer(directory)
+    step_, meta = ck.read_meta(step)
+    saved = meta["plan"]
+    if plan_ is None:
+        plan_ = _plan_from_fingerprint(saved, directory, meta)
+    _validate_fingerprint(saved, plan_)
+
+    # a fresh init state has the saved pytree's exact structure — the
+    # restore template; sharded plans restore replicated onto the CURRENT
+    # mesh (this is the elastic path: the saving mesh may have been wider,
+    # narrower, or absent)
+    template = init_state(plan_.cfg.solver,
+                          jnp.zeros(plan_.features, jnp.float32),
+                          plan_.num_batches)
+    shardings = None
+    if plan_.shards > 1:
+        from ..distributed.sharding import replicated_shardings
+        shardings = replicated_shardings(template, plan_.spec.mesh)
+    state, meta = ck.restore(template, step=step_, shardings=shardings)
+
+    from ..data import pipeline as pipemod
+    fields = {f.name for f in dataclasses.fields(pipemod.AccessStats)}
+    stats = pipemod.AccessStats(**{k: v for k, v in meta["stats"].items()
+                                   if k in fields})
+    history = [float(h) for h in meta["history"]]
+    objective = (float(meta["objective"])
+                 if meta.get("objective") is not None else float("nan"))
+    return RunResult(
+        plan=plan_, objective=objective, history=np.asarray(history),
+        w=np.asarray(state.w), solver_state=state,
+        sampler_state=meta["sampler_state"],
+        epochs_run=0, epochs_done=meta["epochs_done"], stats=stats,
+        train_s=0.0, compute_s=0.0)

@@ -201,3 +201,18 @@ def restore(scheme: str, seed: int, step: int, l: int, batch_size: int,
     """Rebuild sampler state from checkpoint metadata (exact resume)."""
     s = make_sampler(scheme, seed, l, batch_size, with_replacement)
     return dataclasses.replace(s, step=step)
+
+
+def restore_from_meta(state: dict, l: int, batch_size: int,
+                      with_replacement: bool = False) -> SamplerState:
+    """Rebuild a :class:`SamplerState` from the ``sampler_state`` dict a
+    :class:`~repro.core.experiment.RunResult` (or an execute() checkpoint)
+    carries.  Streamed results store the global batch counter (``step``);
+    resident results store whole epochs (``epochs``) — the in-graph engine
+    only stops at epoch boundaries, so its step is ``epochs * m``."""
+    if "step" in state:
+        step = int(state["step"])
+    else:
+        step = int(state["epochs"]) * num_batches(l, batch_size)
+    return restore(state["scheme"], int(state["seed"]), step, l, batch_size,
+                   with_replacement)

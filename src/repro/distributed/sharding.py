@@ -331,6 +331,19 @@ def data_parallel_width(mesh: Optional[Mesh]) -> int:
     return _mesh_axis_size(mesh, DEFAULT_RULES["batch"])
 
 
+def replicated_shardings(template, mesh: Mesh):
+    """Pytree of fully-replicated :class:`NamedSharding`\\ s over ``template``.
+
+    The ERM solver state rides every mesh replicated (see
+    ``repro.core.experiment``), so this is the target-sharding pytree for
+    :meth:`repro.checkpoint.checkpointer.Checkpointer.restore`'s elastic
+    path: a checkpoint saved on an 8-device mesh lands directly on a
+    4-device (or 1-device) mesh's devices at restore time instead of
+    bouncing through the default device."""
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(lambda _: rep, template)
+
+
 def staging_shardings(mesh: Mesh, batch_axes: Sequence[Sequence[Logical]],
                       shapes: Sequence[Sequence[int]],
                       notes: Optional[List[str]] = None,

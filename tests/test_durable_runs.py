@@ -1,0 +1,370 @@
+"""Durable runs: checkpointed execute(), resume_from, elastic mesh restore,
+crash-resumable sweeps.
+
+The contract under test: a run that dies is continued from its newest
+COMPLETE snapshot and reproduces the uninterrupted run bit-for-bit —
+solver weights, objective trace, and sampler schedule.  Elastic restore
+extends the same contract across mesh widths for the bit-identical
+gather ∪ single-host family ('psum' trajectories are mesh-pinned and must
+be rejected).
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                       PlanError, RunResult, STREAMED, RESIDENT, execute,
+                       plan, resume_from)
+from repro.core import samplers, synth_classification
+from repro.data import dataset
+from tests.util import run_py
+
+ROWS, FEATS, B = 600, 12, 100
+
+
+@pytest.fixture(scope="module")
+def dense_corpus(tmp_path_factory):
+    path = tmp_path_factory.mktemp("durable") / "dense.bin"
+    dataset.synth_erm_corpus(path, rows=ROWS, features=FEATS, seed=3)
+    return path
+
+
+@pytest.fixture(scope="module")
+def arrays():
+    X, y, _ = synth_classification(jax.random.PRNGKey(0), ROWS, FEATS,
+                                   separation=2.0)
+    return X, y
+
+
+def _spec(data, **kw):
+    kw.setdefault("step_size", 0.05)
+    kw.setdefault("batch_size", B)
+    kw.setdefault("epochs", 4)
+    return ExperimentSpec(data=data, **kw)
+
+
+# ------------------------------------------------------ policy validation ----
+
+def test_policy_validated_at_plan_time(dense_corpus, tmp_path):
+    data = DataSource.corpus(dense_corpus)
+    with pytest.raises(PlanError, match="every"):
+        plan(_spec(data, checkpoint=CheckpointPolicy(tmp_path, every=0)))
+    with pytest.raises(PlanError, match="keep"):
+        plan(_spec(data, checkpoint=CheckpointPolicy(tmp_path, keep=0)))
+    with pytest.raises(PlanError, match="CheckpointPolicy"):
+        plan(_spec(data, checkpoint=str(tmp_path)))
+    p = plan(_spec(data, checkpoint=CheckpointPolicy(tmp_path)))
+    assert any("durable" in w for w in p.why)
+
+
+def test_policy_str_and_path_directories_compare_equal(tmp_path):
+    assert (CheckpointPolicy(str(tmp_path / "ck"))
+            == CheckpointPolicy(tmp_path / "ck"))
+
+
+# ---------------------------------------------------- checkpointed execute ----
+
+@pytest.mark.parametrize("placement,solver", [
+    (STREAMED, "mbsgd"), (STREAMED, "saga"), (RESIDENT, "svrg"),
+], ids=["streamed-mbsgd", "streamed-saga", "resident-svrg"])
+def test_restore_mid_run_reproduces_uninterrupted(dense_corpus, tmp_path,
+                                                  placement, solver):
+    """Restore at epoch 2 of 4 ("the crash") + 2 more epochs == the
+    uninterrupted run, bitwise, with one cumulative history."""
+    ckdir = tmp_path / f"ck_{placement}_{solver}"
+    p = plan(_spec(DataSource.corpus(dense_corpus), solver=solver,
+                   scheme="systematic", placement=placement,
+                   checkpoint=CheckpointPolicy(ckdir, every=1)))
+    full = execute(p)
+    res = resume_from(ckdir, p, step=2)
+    assert res.epochs_done == 2 and res.epochs_run == 0
+    assert len(res.history) == 2
+    r2 = execute(p, resume=res, epochs=2)
+    np.testing.assert_array_equal(full.w, r2.w)
+    np.testing.assert_array_equal(full.history, r2.history)
+    assert full.sampler_state == r2.sampler_state
+
+
+def test_resume_from_rebuilds_plan_from_fingerprint(dense_corpus, tmp_path):
+    """The no-spec restart: resume_from(dir) alone rebuilds a runnable plan
+    for corpus-backed runs (the process that knew the spec is gone)."""
+    ckdir = tmp_path / "ck"
+    p = plan(_spec(DataSource.corpus(dense_corpus), solver="saga",
+                   placement=STREAMED,
+                   checkpoint=CheckpointPolicy(ckdir, every=1)))
+    full = execute(p)
+    res = resume_from(ckdir)
+    assert res.plan.backend == p.backend
+    assert res.epochs_done == 4
+    np.testing.assert_array_equal(res.w, full.w)
+    np.testing.assert_array_equal(res.history, full.history)
+    r = execute(res.plan, resume=res, epochs=1)
+    assert r.epochs_done == 5 and len(r.history) == 5
+
+
+def test_resume_from_arrays_source_requires_plan(arrays, tmp_path):
+    X, y = arrays
+    ckdir = tmp_path / "ck"
+    p = plan(_spec(DataSource.arrays(X, y), epochs=2,
+                   checkpoint=CheckpointPolicy(ckdir)))
+    full = execute(p)
+    with pytest.raises(ValueError, match="pass the plan"):
+        resume_from(ckdir)
+    res = resume_from(ckdir, p)
+    np.testing.assert_array_equal(res.w, full.w)
+
+
+def test_resume_from_rejects_mismatched_plan_by_field(dense_corpus, tmp_path):
+    ckdir = tmp_path / "ck"
+    data = DataSource.corpus(dense_corpus)
+    p = plan(_spec(data, epochs=1, checkpoint=CheckpointPolicy(ckdir)))
+    execute(p)
+    p_other = plan(_spec(data, epochs=1, seed=7,
+                         checkpoint=CheckpointPolicy(ckdir)))
+    with pytest.raises(ValueError, match="seed"):
+        resume_from(ckdir, p_other)
+
+
+def test_missing_directory_fails_without_creating_it(tmp_path):
+    missing = tmp_path / "nope"
+    with pytest.raises(FileNotFoundError):
+        resume_from(missing)
+    assert not missing.exists()
+
+
+def test_every_n_cadence_always_includes_final_epoch(dense_corpus, tmp_path):
+    from repro.checkpoint import Checkpointer
+    ckdir = tmp_path / "ck"
+    p = plan(_spec(DataSource.corpus(dense_corpus), epochs=3,
+                   placement=STREAMED,
+                   checkpoint=CheckpointPolicy(ckdir, every=2, keep=5)))
+    execute(p)
+    # epoch 2 divides `every`; epoch 3 is the final epoch of the call
+    assert Checkpointer(ckdir).all_steps() == [2, 3]
+
+
+def test_checkpoint_meta_sampler_state_replays_schedule(dense_corpus,
+                                                        tmp_path):
+    """The two-integer sampler state in a snapshot's meta reconstructs the
+    exact index stream the continued run will consume."""
+    from repro.checkpoint import Checkpointer
+    ckdir = tmp_path / "ck"
+    p = plan(_spec(DataSource.corpus(dense_corpus), epochs=2,
+                   placement=STREAMED, scheme="systematic",
+                   checkpoint=CheckpointPolicy(ckdir, every=1)))
+    execute(p)
+    _, meta = Checkpointer(ckdir).read_meta(1)
+    s = samplers.restore_from_meta(meta["sampler_state"], ROWS, B)
+    assert s.step == p.num_batches        # exactly one epoch consumed
+    want = samplers.make_sampler("systematic", p.spec.seed, ROWS, B)
+    for _ in range(p.num_batches):
+        _, want = samplers.next_batch(want)
+    a, _ = samplers.next_batch(want)
+    b, _ = samplers.next_batch(s)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_restore_from_meta_accepts_both_state_shapes():
+    m = samplers.num_batches(ROWS, B)
+    streamed = samplers.restore_from_meta(
+        {"scheme": "cyclic", "seed": 1, "step": 2 * m + 3}, ROWS, B)
+    resident = samplers.restore_from_meta(
+        {"scheme": "cyclic", "seed": 1, "epochs": 2}, ROWS, B)
+    assert streamed.step == 2 * m + 3
+    assert resident.step == 2 * m
+
+
+# ------------------------------------------------- JSON summary round trip ----
+
+def test_runresult_json_roundtrip_and_resume_pointer(dense_corpus, tmp_path):
+    p = plan(_spec(DataSource.corpus(dense_corpus), epochs=2,
+                   placement=STREAMED))
+    r = execute(p)
+    path = r.save_json(tmp_path / "res.json")
+    rj = RunResult.from_json(path, p)
+    assert rj.to_json() == r.to_json()          # bit-identical surface
+    assert rj.solver_state is None
+    with pytest.raises(ValueError, match="resume_from"):
+        execute(p, resume=rj)
+
+
+def test_from_json_rejects_foreign_plan_by_field(dense_corpus, tmp_path):
+    data = DataSource.corpus(dense_corpus)
+    r = execute(plan(_spec(data, epochs=1, placement=STREAMED)))
+    p_other = plan(_spec(data, epochs=1, solver="saga", placement=STREAMED))
+    with pytest.raises(ValueError, match="solver"):
+        RunResult.from_json(r.to_json(), p_other)
+
+
+def test_sharded_json_roundtrip_keeps_per_device_stats(dense_corpus,
+                                                       tmp_path):
+    """A gather-sharded result's JSON round-trips bit-for-bit, per-device
+    access stats (shards, h2d_bytes_per_device, gather_s) included."""
+    code = """
+    import json, numpy as np, jax
+    from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                           RunResult, execute, plan)
+    mesh = jax.make_mesh((2,), ("data",))
+    p = plan(ExperimentSpec(data=DataSource.corpus(r"__CORPUS__"),
+                            solver="mbsgd", step_size=0.05, batch_size=80,
+                            epochs=2, placement="resident", mesh=mesh))
+    r = execute(p)
+    path = r.save_json(r"__OUT__")
+    rj = RunResult.from_json(path, p)
+    assert rj.to_json() == r.to_json()
+    d = rj.to_json()
+    assert d["plan"]["devices"] == 2
+    assert d["stats"]["shards"] == 2
+    assert d["stats"]["h2d_bytes_per_device"] > 0
+    assert "h2d_mb_per_device" in d["breakdown"]
+    print("sharded-json-ok")
+    """.replace("__CORPUS__", str(dense_corpus)).replace(
+        "__OUT__", str(tmp_path / "sharded.json"))
+    r = run_py(code, devices=2)
+    assert "sharded-json-ok" in r.stdout, r.stdout + r.stderr
+
+
+# ----------------------------------------------------- elastic mesh widths ----
+
+def test_elastic_restore_single_host_checkpoint_onto_mesh(dense_corpus,
+                                                          tmp_path):
+    """1 → 8: a single-host checkpoint continues on an 8-device gather
+    mesh, bit-identical (that family shares one trajectory)."""
+    ckdir = tmp_path / "ck"
+    # batch 80 divides the widest mesh (batch_size is a STRICT fingerprint
+    # field — the single-host segment must already use a shardable size)
+    p = plan(_spec(DataSource.corpus(dense_corpus), placement=RESIDENT,
+                   batch_size=80,
+                   checkpoint=CheckpointPolicy(ckdir, every=1)))
+    full = execute(p)       # keep=3 retains steps 2..4; we restore step 2
+    np.save(tmp_path / "ref_w.npy", full.w)
+    code = """
+    import numpy as np, jax
+    from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                           execute, plan, resume_from)
+    mesh = jax.make_mesh((8,), ("data",))
+    p = plan(ExperimentSpec(data=DataSource.corpus(r"__CORPUS__"),
+                            solver="mbsgd", step_size=0.05, batch_size=80,
+                            epochs=4, placement="resident", mesh=mesh,
+                            checkpoint=CheckpointPolicy(r"__CK__", every=1)))
+    res = resume_from(r"__CK__", p, step=2)
+    assert res.epochs_done == 2
+    r2 = execute(p, resume=res, epochs=2)
+    ref = np.load(r"__REF__")
+    np.testing.assert_array_equal(ref, r2.w)
+    print("elastic-1to8-ok")
+    """.replace("__CORPUS__", str(dense_corpus)).replace(
+        "__CK__", str(ckdir)).replace("__REF__", str(tmp_path / "ref_w.npy"))
+    r = run_py(code, devices=8)
+    assert "elastic-1to8-ok" in r.stdout, r.stdout + r.stderr
+
+
+def test_elastic_restore_8_to_4_devices(dense_corpus, tmp_path):
+    """8 → 4: a gather checkpoint from a wide mesh continues on a narrower
+    one, still bit-identical to the single-host trajectory."""
+    ckdir = tmp_path / "ck8"
+    p1 = plan(_spec(DataSource.corpus(dense_corpus), placement=RESIDENT,
+                    batch_size=80))
+    full = execute(p1)
+    np.save(tmp_path / "ref8_w.npy", full.w)
+    save_code = """
+    import jax
+    from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                           execute, plan)
+    mesh = jax.make_mesh((8,), ("data",))
+    p = plan(ExperimentSpec(data=DataSource.corpus(r"__CORPUS__"),
+                            solver="mbsgd", step_size=0.05, batch_size=80,
+                            epochs=4, placement="resident", mesh=mesh,
+                            checkpoint=CheckpointPolicy(r"__CK__", every=1)))
+    execute(p, epochs=2)
+    print("saved-8-ok")
+    """.replace("__CORPUS__", str(dense_corpus)).replace("__CK__", str(ckdir))
+    r1 = run_py(save_code, devices=8)
+    assert "saved-8-ok" in r1.stdout, r1.stdout + r1.stderr
+    resume_code = """
+    import numpy as np, jax
+    from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                           execute, plan, resume_from)
+    mesh = jax.make_mesh((4,), ("data",))
+    p = plan(ExperimentSpec(data=DataSource.corpus(r"__CORPUS__"),
+                            solver="mbsgd", step_size=0.05, batch_size=80,
+                            epochs=4, placement="resident", mesh=mesh,
+                            checkpoint=CheckpointPolicy(r"__CK__", every=1)))
+    res = resume_from(r"__CK__", p)
+    assert res.epochs_done == 2
+    assert res.solver_state.w.sharding.num_devices == 4
+    r2 = execute(p, resume=res, epochs=2)
+    np.testing.assert_array_equal(np.load(r"__REF__"), r2.w)
+    print("elastic-8to4-ok")
+    """.replace("__CORPUS__", str(dense_corpus)).replace(
+        "__CK__", str(ckdir)).replace("__REF__",
+                                      str(tmp_path / "ref8_w.npy"))
+    r2 = run_py(resume_code, devices=4)
+    assert "elastic-8to4-ok" in r2.stdout, r2.stdout + r2.stderr
+
+
+def test_psum_checkpoint_is_mesh_pinned(dense_corpus, tmp_path):
+    """A 'psum' checkpoint must refuse a different mesh width — its
+    reduction order is only deterministic per mesh."""
+    ckdir = tmp_path / "ckpsum"
+    save_code = """
+    import jax
+    from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                           execute, plan)
+    mesh = jax.make_mesh((4,), ("data",))
+    p = plan(ExperimentSpec(data=DataSource.corpus(r"__CORPUS__"),
+                            solver="mbsgd", step_size=0.05, batch_size=100,
+                            epochs=2, placement="resident", mesh=mesh,
+                            reduction="psum",
+                            checkpoint=CheckpointPolicy(r"__CK__")))
+    execute(p)
+    print("saved-psum-ok")
+    """.replace("__CORPUS__", str(dense_corpus)).replace("__CK__", str(ckdir))
+    r1 = run_py(save_code, devices=4)
+    assert "saved-psum-ok" in r1.stdout, r1.stdout + r1.stderr
+    resume_code = """
+    import jax
+    from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                           plan, resume_from)
+    mesh = jax.make_mesh((2,), ("data",))
+    p = plan(ExperimentSpec(data=DataSource.corpus(r"__CORPUS__"),
+                            solver="mbsgd", step_size=0.05, batch_size=100,
+                            epochs=2, placement="resident", mesh=mesh,
+                            reduction="psum",
+                            checkpoint=CheckpointPolicy(r"__CK__")))
+    try:
+        resume_from(r"__CK__", p)
+    except ValueError as e:
+        assert "psum" in str(e)
+        print("psum-pinned-ok")
+    """.replace("__CORPUS__", str(dense_corpus)).replace("__CK__", str(ckdir))
+    r2 = run_py(resume_code, devices=2)
+    assert "psum-pinned-ok" in r2.stdout, r2.stdout + r2.stderr
+
+
+# --------------------------------------------------- crash-resumable sweep ----
+
+def test_sweep_restart_picks_up_cells_from_checkpoints(arrays, tmp_path):
+    """A restarted sweep over the same grid restores every cell and lands
+    on the same weights an uninterrupted sweep produces."""
+    from benchmarks.run import run_sweep
+    X, y = arrays
+    base = _spec(DataSource.arrays(X, y), epochs=3)
+    grid = [dataclasses.replace(base, solver=s) for s in ("mbsgd", "saga")]
+    # "first attempt": only 1 of 3 epochs per cell before the "crash"
+    short = [dataclasses.replace(s, epochs=1) for s in grid]
+    run_sweep(short, checkpoint_dir=tmp_path / "ck", log=lambda *_: None)
+    # restart with the full budget: cells resume at epoch 1 (epoch budget
+    # is an ELASTIC fingerprint field)
+    out = run_sweep(grid, checkpoint_dir=tmp_path / "ck",
+                    json_out=tmp_path / "grid.json", log=lambda *_: None)
+    ref = [execute(plan(s)) for s in grid]
+    for (spec, res), want in zip(out, ref):
+        assert res.epochs_done == 3
+        np.testing.assert_array_equal(res.w, want.w)
+    d = json.loads((tmp_path / "grid.json").read_text())
+    assert all(r["epochs_done"] == 3 for r in d["results"])
+    assert d["meta"]["checkpoint_dir"] == str(tmp_path / "ck")

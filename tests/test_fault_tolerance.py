@@ -90,3 +90,72 @@ def test_kill_and_resume_matches_uninterrupted(tmp_path):
     for step, loss in hist_b.items():
         assert step in ref_hist
         np.testing.assert_allclose(loss, ref_hist[step], rtol=1e-5), step
+
+
+# --------------------------------------------- execute() checkpoint path ----
+
+EXEC_SNIPPET = """
+import numpy as np
+from pathlib import Path
+from repro.api import (CheckpointPolicy, DataSource, ExperimentSpec,
+                       execute, plan, resume_from)
+from repro.data import dataset
+
+work = Path(r"{work}")
+corpus = work / "corpus.bin"
+if not corpus.exists():
+    dataset.synth_erm_corpus(corpus, rows=6000, features=24, seed=9)
+p = plan(ExperimentSpec(data=DataSource.corpus(corpus), solver="saga",
+                        scheme="systematic", step_size=0.05, batch_size=200,
+                        epochs={epochs}, placement="streamed",
+                        checkpoint=CheckpointPolicy(work / "ckpt", every=1)))
+try:
+    res = resume_from(work / "ckpt")
+    print("RESUMED", res.epochs_done, flush=True)
+except FileNotFoundError:
+    res = None
+    print("FRESH", flush=True)
+remaining = {epochs} - (res.epochs_done if res else 0)
+r = execute(p, resume=res, epochs=remaining) if remaining else res
+np.save(work / "w_{tag}.npy", r.w)
+np.save(work / "hist_{tag}.npy", r.history)
+print("DONE", r.epochs_done, flush=True)
+"""
+
+
+def test_sigkill_mid_execute_resumes_bit_identical(tmp_path):
+    """The durable-execute contract end to end: SIGKILL a checkpointed
+    execute() mid-run, restart with resume_from(dir) (no spec — the plan is
+    rebuilt from the checkpoint's fingerprint), and the finished run is
+    BIT-identical to an uninterrupted one — weights and the full cumulative
+    objective trace."""
+    epochs = 12
+    ref = tmp_path / "ref"
+    ref.mkdir()
+    r = run_py(EXEC_SNIPPET.format(work=ref, epochs=epochs, tag="ref"),
+               timeout=900)
+    assert f"DONE {epochs}" in r.stdout, r.stdout + r.stderr
+
+    work = tmp_path / "crash"
+    work.mkdir()
+    proc = subprocess.Popen(
+        [sys.executable, "-c",
+         EXEC_SNIPPET.format(work=work, epochs=epochs, tag="a")],
+        env=_env(), cwd=REPO, stdout=subprocess.PIPE, text=True)
+    deadline = time.time() + 600
+    while time.time() < deadline:
+        if (work / "ckpt" / "LATEST").exists():
+            break
+        time.sleep(0.1)
+    proc.kill()
+    proc.wait()
+
+    r2 = run_py(EXEC_SNIPPET.format(work=work, epochs=epochs, tag="b"),
+                timeout=900)
+    assert f"DONE {epochs}" in r2.stdout, r2.stdout + r2.stderr
+    # the kill may land before OR after the victim finished; either way the
+    # survivor must land exactly on the uninterrupted trajectory
+    np.testing.assert_array_equal(np.load(ref / "w_ref.npy"),
+                                  np.load(work / "w_b.npy"))
+    np.testing.assert_array_equal(np.load(ref / "hist_ref.npy"),
+                                  np.load(work / "hist_b.npy"))
