@@ -10,6 +10,12 @@ planner picked the expected backend and the run produced a finite
 objective, then writes each ``RunResult`` JSON so CI can upload them as
 artifacts.
 
+Every cell also runs with a :class:`TracePolicy`: the smoke asserts the
+span timeline reconciles with the AccessStats breakdown
+(``RunResult.verify_timeline``) and that the emitted Chrome trace JSON is
+well-formed (``Timeline.load_chrome``), then CI uploads the per-backend
+``trace_<cell>.json`` files alongside the run JSONs.
+
 When more than one jax device is visible (the multi-device CI job forces
 8 CPU devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
 two sharded cells join the matrix: ``sharded-streamed`` and
@@ -28,8 +34,8 @@ import jax
 
 from repro.api import (FUSED, RESIDENT, RESIDENT_FUSED, SHARDED_RESIDENT,
                        SHARDED_STREAMED, SPARSE_CSR, STREAMED,
-                       STREAMED_EAGER, DataSource, ExperimentSpec, execute,
-                       plan)
+                       STREAMED_EAGER, DataSource, ExperimentSpec, Timeline,
+                       TracePolicy, execute, plan)
 from repro.data import dataset, sparse
 
 
@@ -70,8 +76,15 @@ def build_cells(out_dir: Path):
 
 
 def main(out_dir: Path) -> None:
+    import dataclasses
+
     out_dir.mkdir(parents=True, exist_ok=True)
     for name, want, spec in build_cells(out_dir):
+        # every cell runs traced: CI uploads trace_<name>.json per backend
+        # and the smoke itself asserts (a) the span sums reconcile with the
+        # AccessStats breakdown and (b) the file is well-formed Chrome JSON
+        trace_path = out_dir / f"trace_{name}.json"
+        spec = dataclasses.replace(spec, trace=TracePolicy(path=trace_path))
         p = plan(spec)
         assert p.backend == want, f"planned {p.backend}, wanted {want}"
         if spec.step_mode == "line_search":
@@ -79,7 +92,11 @@ def main(out_dir: Path) -> None:
         res = execute(p)
         assert math.isfinite(res.objective), (name, res.objective)
         assert res.epochs_run == spec.epochs
+        report = res.verify_timeline()       # raises on drift past 5%
+        assert report, f"{name}: verify_timeline ran no checks"
+        Timeline.load_chrome(trace_path)     # raises on malformed events
         blob = res.to_json()
+        assert blob["schema"] == 3 and "metrics" in blob, blob.keys()
         if p.shards > 1:
             # the sharded cells must carry per-device H2D accounting in the
             # uploaded artifact — the multi-device CI job's contract
@@ -89,7 +106,9 @@ def main(out_dir: Path) -> None:
             assert blob["breakdown"]["h2d_mb_per_device"] > 0
         path = res.save_json(out_dir / f"run_{name}.json")
         print(f"{name}: objective={res.objective:.6f} "
-              f"epoch_s={res.breakdown()['epoch_s']:.4f} -> {path}")
+              f"epoch_s={res.breakdown()['epoch_s']:.4f} "
+              f"trace={trace_path.name} "
+              f"({len(res.timeline.events)} spans) -> {path}")
 
 
 if __name__ == "__main__":

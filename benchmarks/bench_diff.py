@@ -1,0 +1,152 @@
+"""Diff two BENCH_*.json files cell by cell: the perf-trajectory guard.
+
+Every benchmark emitter in this repo (``erm_timing`` dense/sparse,
+``run.py sweep``) writes the same envelope — ``{"meta": {...},
+"results": [{"name": ..., "epoch_s": ..., ...}]}`` — so one differ covers
+them all.  Cells are matched by ``name``; for each common cell the timing
+metrics (default ``epoch_s`` and ``access_s_per_epoch``) are compared and
+any cell whose new value exceeds ``base * (1 + threshold)`` is flagged as
+a regression.
+
+CI runs this NON-GATING against the committed baseline (fresh timings on
+a shared runner drift far more than a code change does — the output is a
+reviewer signal, not a merge gate); ``--gate`` turns regressions into a
+nonzero exit for local A/B runs on a quiet machine:
+
+  python benchmarks/bench_diff.py benchmarks/BENCH_erm.json /tmp/BENCH_erm.json
+  python benchmarks/bench_diff.py base.json new.json --threshold 0.10 --gate
+
+Output CSV: ``name,metric,base_s,new_s,ratio,flag`` (ratio = new/base,
+flag = ``REGRESSED`` past the threshold, ``improved`` under 1/(1+t),
+blank otherwise), then added/removed cells and a one-line summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Sequence, Tuple
+
+DEFAULT_METRICS = ("epoch_s", "access_s_per_epoch")
+# meta keys that describe the WORKLOAD — a diff across different scales
+# compares apples to oranges and must say so up front.  backend is
+# included: cpu-vs-tpu timings are not comparable either.
+_SCALE_KEYS = ("rows", "features", "batch", "epochs", "densities",
+               "resident", "devices", "backend", "unit")
+
+
+def load_bench(path) -> Tuple[Dict, Dict[str, Dict]]:
+    """(meta, cells-by-name) from a BENCH-style JSON; raises ValueError on
+    anything that is not the shared envelope."""
+    d = json.loads(Path(path).read_text())
+    if not isinstance(d, dict) or not isinstance(d.get("results"), list):
+        raise ValueError(f"{path}: no 'results' list — not a BENCH json")
+    cells = {}
+    for r in d["results"]:
+        if isinstance(r, dict) and "name" in r:
+            cells[r["name"]] = r
+    if not cells:
+        raise ValueError(f"{path}: 'results' holds no named cells")
+    return d.get("meta", {}), cells
+
+
+def meta_mismatches(base_meta: Dict, new_meta: Dict) -> List[str]:
+    """Workload-scale keys that differ between the two runs."""
+    out = []
+    for k in _SCALE_KEYS:
+        if base_meta.get(k) != new_meta.get(k) and (
+                k in base_meta or k in new_meta):
+            out.append(f"{k}: {base_meta.get(k)!r} -> {new_meta.get(k)!r}")
+    return out
+
+
+def diff_cells(base: Dict[str, Dict], new: Dict[str, Dict],
+               metrics: Sequence[str], threshold: float):
+    """(rows, regressions) over cells present in BOTH files.
+
+    rows: (name, metric, base_val, new_val, ratio, flag) in name order;
+    regressions: the subset whose ratio exceeds ``1 + threshold``.
+    """
+    rows, regressions = [], []
+    for name in sorted(base.keys() & new.keys()):
+        b, n = base[name], new[name]
+        for m in metrics:
+            bv, nv = b.get(m), n.get(m)
+            if not isinstance(bv, (int, float)) \
+                    or not isinstance(nv, (int, float)):
+                continue          # cell never ran this far (budget cut-off)
+            bv, nv = float(bv), float(nv)
+            if bv > 0:
+                ratio = nv / bv
+            else:
+                # zero baseline (e.g. access_s on an arrays cell): any new
+                # nonzero cost is an infinite regression, equal-zero is flat
+                ratio = float("inf") if nv > 0 else 1.0
+            if ratio > 1.0 + threshold:
+                flag = "REGRESSED"
+            elif ratio < 1.0 / (1.0 + threshold):
+                flag = "improved"
+            else:
+                flag = ""
+            row = (name, m, bv, nv, ratio, flag)
+            rows.append(row)
+            if flag == "REGRESSED":
+                regressions.append(row)
+    return rows, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("base", help="baseline BENCH json (e.g. the committed "
+                                 "benchmarks/BENCH_erm.json)")
+    ap.add_argument("new", help="candidate BENCH json from this build")
+    ap.add_argument("--metrics", type=str,
+                    default=",".join(DEFAULT_METRICS),
+                    help="comma-separated per-cell columns to compare")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional slowdown that counts as a regression "
+                         "(0.25 = new > 1.25x base)")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 on any regression (default: report only — "
+                         "the CI diff-vs-committed step is non-gating)")
+    a = ap.parse_args(argv)
+    try:
+        base_meta, base_cells = load_bench(a.base)
+        new_meta, new_cells = load_bench(a.new)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: {e}", file=sys.stderr)
+        return 2
+    metrics = tuple(m for m in a.metrics.split(",") if m)
+
+    for mm in meta_mismatches(base_meta, new_meta):
+        print(f"# WARNING meta differs ({mm}) — ratios compare different "
+              f"workloads")
+    rows, regressions = diff_cells(base_cells, new_cells, metrics,
+                                   a.threshold)
+    print("name,metric,base_s,new_s,ratio,flag")
+    for name, m, bv, nv, ratio, flag in rows:
+        print(f"{name},{m},{bv:.6f},{nv:.6f},{ratio:.3f},{flag}")
+    for name in sorted(new_cells.keys() - base_cells.keys()):
+        print(f"# added cell: {name}")
+    for name in sorted(base_cells.keys() - new_cells.keys()):
+        print(f"# removed cell: {name}")
+    compared = len(rows)
+    if compared == 0:
+        print("bench_diff: no overlapping cells/metrics to compare",
+              file=sys.stderr)
+        return 2
+    print(f"# {compared} comparisons across "
+          f"{len(base_cells.keys() & new_cells.keys())} cells: "
+          f"{len(regressions)} regression(s) past "
+          f"+{a.threshold * 100:.0f}%")
+    for name, m, bv, nv, ratio, _ in regressions:
+        print(f"# REGRESSION {name}.{m}: {bv:.6f}s -> {nv:.6f}s "
+              f"({ratio:.2f}x)")
+    if regressions and a.gate:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -94,6 +94,10 @@ def main(argv=None) -> int:
         return 2
     ok, verdict = gate(counts, a.max_failed, a.min_passed)
     print(f"ci_gate: {verdict}")
+    # GitHub workflow annotation: the counts surface on the run summary
+    # page without opening the log (harmless plain text anywhere else)
+    kind = "notice" if ok else "error"
+    print(f"::{kind} title=tier-1 gate::{verdict}")
     return 0 if ok else 1
 
 

@@ -33,6 +33,7 @@ scale it up).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from functools import partial
 from pathlib import Path
@@ -41,7 +42,7 @@ import jax
 
 from repro.api import (AUTO, CONSTANT, DataSource, ExperimentSpec,
                        LINE_SEARCH, LS_MODES, RESIDENT, SEQUENTIAL, SOLVERS,
-                       STREAMED, VECTORIZED, execute, plan)
+                       STREAMED, TracePolicy, VECTORIZED, execute, plan)
 
 # --ls-mode both: time BOTH ls rules per LS cell, interleaved, and report
 # the vectorized row with the sequential baseline alongside — the only
@@ -72,14 +73,17 @@ def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
             batch: int, epochs: int, reg: float = 1e-4,
             chunk: int | None = None, prefetch: int = 2,
             resident: bool = False, ls_mode: str = AUTO, mesh=None,
-            reduction: str = AUTO):
+            reduction: str = AUTO, trace_dir: Path | None = None):
     """Train and time one (solver, step rule, scheme) cell through
     plan()/execute(); returns the BENCH_erm result-dict schema.  LS cells
     carry the resolved ``ls_mode`` column (``vectorized`` trial-ladder
     sweep by default; ``--ls-mode sequential`` re-times the old
     per-batch backtracking ``while_loop`` baseline).  With ``mesh`` the
     planner lowers to the sharded backends and the row gains ``devices`` /
-    per-device H2D columns."""
+    per-device H2D columns.  ``trace_dir`` writes the cell's Chrome trace
+    to ``<dir>/<row-name>.json`` (repeats overwrite — the file holds the
+    last measurement; note the spans themselves add a small overhead the
+    timing columns then include, see benchmarks/README)."""
     spec = ExperimentSpec(
         data=DataSource.corpus(corpus), loss="logistic", reg=reg,
         solver=solver, scheme=scheme, step_mode=step_mode, ls_mode=ls_mode,
@@ -87,11 +91,18 @@ def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
         placement=RESIDENT if resident else STREAMED,
         record_objective=False, mesh=mesh, reduction=reduction)
     p = plan(spec)
+    name = (f"erm_{solver}_{step_mode}_{scheme}"
+            + ("_resident" if resident else "")
+            + (f"_d{p.shards}" if p.shards > 1 else ""))
+    if trace_dir is not None:
+        # shard-count suffix comes from the plan, so attach the policy and
+        # re-plan (planning is pure validation — cheap) with the final name
+        spec = dataclasses.replace(
+            spec, trace=TracePolicy(path=Path(trace_dir) / f"{name}.json"))
+        p = plan(spec)
     res = execute(p)
     r = {
-        "name": f"erm_{solver}_{step_mode}_{scheme}"
-                + ("_resident" if resident else "")
-                + (f"_d{p.shards}" if p.shards > 1 else ""),
+        "name": name,
         "solver": solver, "step_mode": step_mode, "scheme": scheme,
         "epochs": epochs, "chunk": p.chunk, "backend": p.backend,
         "devices": p.shards,
@@ -108,21 +119,26 @@ def run_one(corpus: Path, solver: str, step_mode: str, scheme: str, *,
 
 def run_one_sparse(corpus: Path, solver: str, step_mode: str, scheme: str, *,
                    batch: int, epochs: int, reg: float = 1e-4,
-                   chunk: int | None = None, prefetch: int = 2):
+                   chunk: int | None = None, prefetch: int = 2,
+                   trace_dir: Path | None = None, tag: str = ""):
     """Sparse (CSR) counterpart of :func:`run_one`: the planner routes the
     cell through the ``sparse-csr`` backend (SparsePipeline streaming
     padded-ELL batches into the sparse chunked epoch engine) and access
     bytes are nnz-proportional — the regime where the paper's RS-vs-CS/SS
-    gap is widest."""
+    gap is widest.  ``tag`` lands in the row name AND the trace filename
+    (the density suffix — so per-density traces don't overwrite)."""
+    name = f"erm_sparse_{solver}_{step_mode}_{scheme}{tag}"
     spec = ExperimentSpec(
         data=DataSource.corpus(corpus), loss="logistic", reg=reg,
         solver=solver, scheme=scheme, step_mode=step_mode,
         batch_size=batch, epochs=epochs, chunk=chunk, prefetch=prefetch,
-        record_objective=False)
+        record_objective=False,
+        trace=(TracePolicy(path=Path(trace_dir) / f"{name}.json")
+               if trace_dir is not None else None))
     p = plan(spec)
     res = execute(p)
     return {
-        "name": f"erm_sparse_{solver}_{step_mode}_{scheme}",
+        "name": name,
         "solver": solver, "step_mode": step_mode, "scheme": scheme,
         "epochs": epochs, "chunk": p.chunk, "backend": p.backend,
         "sparse": True, "density": p.density, "kmax": p.kmax, "nnz": p.nnz,
@@ -147,7 +163,9 @@ def _derived_csv(r) -> str:
 def main(rows=100_000, features=64, batch=500, epochs=3,
          solvers_=SOLVERS, corpus_dir=Path("artifacts/bench"),
          chunk=None, json_out=None, resident=False, ls_mode=AUTO,
-         repeats=1, devices=1, reduction=AUTO):
+         repeats=1, devices=1, reduction=AUTO, trace_dir=None):
+    if trace_dir is not None:
+        Path(trace_dir).mkdir(parents=True, exist_ok=True)
     corpus_dir.mkdir(parents=True, exist_ok=True)
     corpus = corpus_dir / f"erm_{rows}x{features}.bin"
     if not corpus.exists():
@@ -169,7 +187,7 @@ def main(rows=100_000, features=64, batch=500, epochs=3,
                                batch=batch, epochs=epochs, chunk=chunk,
                                resident=resident, mesh=mesh,
                                reduction=reduction if mesh is not None
-                               else AUTO)
+                               else AUTO, trace_dir=trace_dir)
                 if step_mode == LINE_SEARCH and ls_mode == BOTH:
                     # interleave the two rules within each repeat so the
                     # comparison is time-local (shared machines drift by
@@ -216,7 +234,7 @@ def main(rows=100_000, features=64, batch=500, epochs=3,
 def main_sparse(rows=100_000, features=65_536, batch=500, epochs=3,
                 densities=(0.0005, 0.002), solvers_=("mbsgd",),
                 corpus_dir=Path("artifacts/bench"), chunk=None,
-                json_out=None):
+                json_out=None, trace_dir=None):
     """Sparse trajectory: access/H2D/compute per scheme x density.
 
     Constant step only (the paper's sparse tables are dominated by access
@@ -227,6 +245,8 @@ def main_sparse(rows=100_000, features=65_536, batch=500, epochs=3,
     (65536 features): narrow sparse corpora fit entirely in CPU cache,
     where no access pattern can matter.
     """
+    if trace_dir is not None:
+        Path(trace_dir).mkdir(parents=True, exist_ok=True)
     corpus_dir.mkdir(parents=True, exist_ok=True)
     out, results = [], []
     for density in densities:
@@ -238,8 +258,8 @@ def main_sparse(rows=100_000, features=65_536, batch=500, epochs=3,
             times, access = {}, {}
             for scheme in samplers.SCHEMES:
                 r = run_one_sparse(corpus, solver, CONSTANT, scheme,
-                                   batch=batch, epochs=epochs, chunk=chunk)
-                r["name"] += f"_d{density}"
+                                   batch=batch, epochs=epochs, chunk=chunk,
+                                   trace_dir=trace_dir, tag=f"_d{density}")
                 _annotate_vs_rs(r, times, access)
                 results.append(r)
                 out.append((r["name"], r["epoch_s"] * 1e6, _derived_csv(r)))
@@ -300,6 +320,11 @@ if __name__ == "__main__":
                     help=f"write the breakdown JSON here; opt-in so ad-hoc "
                          f"runs don't clobber the committed {DEFAULT_JSON.name}"
                          f"/{DEFAULT_SPARSE_JSON.name}")
+    ap.add_argument("--trace", type=Path, default=None, metavar="DIR",
+                    help="write a Chrome trace per cell under DIR "
+                         "(<row-name>.json); span recording adds a small "
+                         "overhead the timing columns then include — don't "
+                         "compare traced timings against untraced baselines")
     a = ap.parse_args()
     if a.sparse and a.resident:
         ap.error("--resident stages a dense corpus; drop --sparse")
@@ -320,7 +345,8 @@ if __name__ == "__main__":
         rows_out = main_sparse(
             a.rows, a.features or 65_536, a.batch, a.epochs,
             densities=tuple(float(d) for d in a.densities.split(",") if d),
-            solvers_=sel, chunk=a.chunk, json_out=a.json_out)
+            solvers_=sel, chunk=a.chunk, json_out=a.json_out,
+            trace_dir=a.trace)
     else:
         sel = tuple(s for s in (a.solvers or ",".join(SOLVERS)).split(",")
                     if s)
@@ -328,6 +354,6 @@ if __name__ == "__main__":
                         solvers_=sel, chunk=a.chunk, json_out=a.json_out,
                         resident=a.resident, ls_mode=a.ls_mode,
                         repeats=a.repeats, devices=a.devices,
-                        reduction=a.reduction)
+                        reduction=a.reduction, trace_dir=a.trace)
     for name, us, derived in rows_out:
         print(f"{name},{us:.2f},{derived}")

@@ -18,6 +18,14 @@ grid loop): cells advance round-robin a few epochs at a time via
 fairly mid-flight and every partial cell remains resumable; the demo grid
 is the constant vs line-search axis.  ``--json-out`` emits a BENCH-style
 JSON per grid.
+
+``python -m benchmarks.run run`` executes ONE spec cell from CLI axes and
+``--trace out.json`` attaches a :class:`~repro.api.TracePolicy` — the
+quickest way from zero to a Chrome/Perfetto timeline of the access / H2D /
+compute overlap (open the JSON at ``ui.perfetto.dev``).  ``sweep --trace
+DIR`` does the same per grid cell (``DIR/cell_<i>.json``; round-robin
+resume overwrites each file per turn, so a finished sweep leaves each
+cell's FINAL segment).
 """
 from __future__ import annotations
 
@@ -65,7 +73,7 @@ SECTIONS = []
 # ---------------------------------------------------------------------------
 
 def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
-              checkpoint_dir=None, log=print):
+              checkpoint_dir=None, trace_dir=None, log=print):
     """Drive a grid of ``ExperimentSpec``s under a wall-clock budget.
 
     Cells advance ROUND-ROBIN, ``round_epochs`` at a time, resuming each
@@ -84,16 +92,29 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
     mid-grid costs at most the epochs since each cell's last snapshot.
     Cell directories are keyed by grid ORDER, so the restart must rebuild
     the same grid (the fingerprint check rejects a reordered one).
+
+    ``trace_dir`` attaches a :class:`~repro.api.TracePolicy` per cell
+    (``<dir>/cell_<i>.json``).  Tracing is excluded from the plan
+    fingerprint, so it composes with ``checkpoint_dir``: a crash-restarted
+    sweep may toggle tracing freely.  Each round-robin turn rewrites the
+    cell's file, so the trace on disk is the cell's latest segment.
     """
     import dataclasses
     from pathlib import Path
 
-    from repro.api import CheckpointPolicy, execute, plan, resume_from
+    from repro.api import CheckpointPolicy, TracePolicy, execute, plan, \
+        resume_from
 
     if checkpoint_dir is not None:
         root = Path(checkpoint_dir)
         grid = [dataclasses.replace(
                     s, checkpoint=CheckpointPolicy(root / f"cell_{i:03d}"))
+                for i, s in enumerate(grid)]
+    if trace_dir is not None:
+        troot = Path(trace_dir)
+        troot.mkdir(parents=True, exist_ok=True)
+        grid = [dataclasses.replace(
+                    s, trace=TracePolicy(path=troot / f"cell_{i:03d}.json"))
                 for i, s in enumerate(grid)]
     cells = [{"spec": s, "plan": plan(s), "result": None} for s in grid]
     for i, c in enumerate(cells):
@@ -213,11 +234,78 @@ def sweep_main(argv) -> None:
     ap.add_argument("--checkpoint-dir", type=str, default=None,
                     help="per-cell checkpoints under this dir; a restarted "
                          "sweep (same grid) picks up mid-grid after a crash")
+    ap.add_argument("--trace", type=str, default=None, metavar="DIR",
+                    help="per-cell Chrome traces under this dir "
+                         "(cell_<i>.json; latest round-robin segment)")
     a = ap.parse_args(argv)
     print("name,us_per_call,derived")
     run_sweep(demo_sweep_grid(rows=a.rows, epochs=a.epochs),
               budget_s=a.budget_s, round_epochs=a.round_epochs,
-              json_out=a.json_out, checkpoint_dir=a.checkpoint_dir)
+              json_out=a.json_out, checkpoint_dir=a.checkpoint_dir,
+              trace_dir=a.trace)
+
+
+def run_main(argv) -> None:
+    """``python -m benchmarks.run run``: one spec cell, optionally traced.
+
+    The cell streams (or stages resident) a synthetic memmapped corpus —
+    the same artifact ``erm_timing`` builds — so a single command yields a
+    span timeline of the exact regime the paper times.
+    """
+    import argparse
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser(prog="benchmarks.run run")
+    ap.add_argument("--solver", default="mbsgd")
+    ap.add_argument("--scheme", default="systematic",
+                    help="random | cyclic | systematic")
+    ap.add_argument("--step-mode", default="constant",
+                    help="constant | line_search")
+    ap.add_argument("--placement", default="streamed",
+                    choices=("streamed", "resident"))
+    ap.add_argument("--rows", type=int, default=8192)
+    ap.add_argument("--features", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--trace", type=Path, default=None, metavar="OUT.json",
+                    help="write a Chrome/Perfetto trace of the run here "
+                         "and verify it reconciles with the breakdown")
+    ap.add_argument("--json-out", type=Path, default=None,
+                    help="write the RunResult JSON here")
+    a = ap.parse_args(argv)
+
+    from repro.api import (DataSource, ExperimentSpec, TracePolicy, execute,
+                           plan)
+    from repro.data import dataset
+
+    corpus_dir = Path("artifacts/bench")
+    corpus_dir.mkdir(parents=True, exist_ok=True)
+    corpus = corpus_dir / f"erm_{a.rows}x{a.features}.bin"
+    if not corpus.exists():
+        dataset.synth_erm_corpus(corpus, rows=a.rows, features=a.features)
+    spec = ExperimentSpec(
+        data=DataSource.corpus(corpus), loss="logistic", reg=1e-4,
+        solver=a.solver, scheme=a.scheme, step_mode=a.step_mode,
+        batch_size=a.batch, epochs=a.epochs, placement=a.placement,
+        record_objective=False,
+        trace=TracePolicy(path=a.trace) if a.trace is not None else None)
+    p = plan(spec)
+    res = execute(p)
+    b = res.breakdown()
+    print("name,us_per_call,derived")
+    print(f"run_{a.solver}_{a.step_mode}_{a.scheme},"
+          f"{b['epoch_s'] * 1e6:.2f},"
+          f"objective={res.objective:.10f};backend={p.backend};"
+          f"access_ms={b['access_s_per_epoch'] * 1e3:.3f};"
+          f"h2d_ms={b['h2d_s_per_epoch'] * 1e3:.3f};"
+          f"compute_ms={b['compute_s_per_epoch'] * 1e3:.3f}")
+    if a.trace is not None:
+        report = res.verify_timeline()
+        print(f"# trace -> {a.trace} ({len(res.timeline.events)} events; "
+              f"{len(report)} reconciliation checks OK; open at "
+              f"ui.perfetto.dev)")
+    if a.json_out is not None:
+        res.save_json(a.json_out)
 
 
 def main() -> None:
@@ -247,5 +335,7 @@ def main() -> None:
 if __name__ == '__main__':
     if len(sys.argv) > 1 and sys.argv[1] == "sweep":
         sweep_main(sys.argv[2:])
+    elif len(sys.argv) > 1 and sys.argv[1] == "run":
+        run_main(sys.argv[2:])
     else:
         main()

@@ -25,6 +25,7 @@ from .core.experiment import (  # noqa: F401
 from .core.samplers import CYCLIC, RANDOM, SCHEMES, SYSTEMATIC  # noqa: F401
 from .core.solvers import CONSTANT, LINE_SEARCH, SOLVERS  # noqa: F401
 from .core.step_rules import LS_MODES, SEQUENTIAL, VECTORIZED  # noqa: F401
+from .obs import Timeline, TracePolicy, Tracer  # noqa: F401
 
 __all__ = [
     "ARRAYS", "AUTO", "BACKENDS", "CSR", "DENSE", "EAGER", "FUSED",
@@ -36,5 +37,6 @@ __all__ = [
     "LS_MODES", "SEQUENTIAL", "VECTORIZED",
     "Checkpointer", "CheckpointPolicy",
     "DataSource", "ExecutionPlan", "ExperimentSpec", "PlanError",
-    "RunResult", "execute", "plan", "resume_from", "run_experiment",
+    "RunResult", "Timeline", "TracePolicy", "Tracer",
+    "execute", "plan", "resume_from", "run_experiment",
 ]

@@ -36,6 +36,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from ..obs import CHECKPOINT, NULL_TRACER
+
 _LEAF_SEP = "."
 
 
@@ -130,11 +132,13 @@ def _unflatten_into(template, flat: Dict[str, Any]):
 
 
 class Checkpointer:
-    def __init__(self, directory: Path, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: Path, keep: int = 3, async_save: bool = True,
+                 tracer=NULL_TRACER):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_save = async_save
+        self.tracer = tracer
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -143,9 +147,16 @@ class Checkpointer:
              block: bool = False):
         """Snapshot to host, then write on a background thread."""
         self.wait()  # one in-flight save at a time
-        flat = _flatten(tree)
-        host = {k: (np.asarray(jax.device_get(v)) if v is not None else None)
-                for k, v in flat.items()}
+        # the "snapshot" span is the ONLY synchronous cost the training
+        # loop pays for an async save; the serialize/commit spans below run
+        # on the writer thread — open the trace and the zero-stall claim is
+        # visible as a short snapshot on the main thread overlapping long
+        # checkpoint-lane work elsewhere
+        with self.tracer.span("snapshot", CHECKPOINT, step=step):
+            flat = _flatten(tree)
+            host = {k: (np.asarray(jax.device_get(v))
+                        if v is not None else None)
+                    for k, v in flat.items()}
         meta = dict(meta or {})
 
         def _write():
@@ -167,26 +178,31 @@ class Checkpointer:
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
-        index = {}
-        for key, arr in host.items():
-            if arr is None:
-                index[key] = None
-                continue
-            fname = re.sub(r"[^\w\.\-]", "_", key) + ".npy"
-            np.save(tmp / fname, arr)
-            index[key] = {"file": fname, "shape": list(arr.shape),
-                          "dtype": str(arr.dtype)}
-        manifest = {"step": step, "index": index, "meta": meta,
-                    "time": time.time()}
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
-        final = self.dir / name
-        if final.exists():
-            shutil.rmtree(final)
-        tmp.rename(final)                      # atomic publish
-        latest_tmp = self.dir / f".LATEST_{os.getpid()}"
-        latest_tmp.write_text(name)
-        latest_tmp.rename(self.dir / "LATEST")  # atomic pointer flip
-        self._gc()
+        # serialize (leaf bytes to disk) and commit (atomic publish + GC)
+        # as sibling spans: both live on the writer thread when async_save,
+        # so the checkpoint lane shows the save overlapping compute
+        with self.tracer.span("serialize", CHECKPOINT, step=step):
+            index = {}
+            for key, arr in host.items():
+                if arr is None:
+                    index[key] = None
+                    continue
+                fname = re.sub(r"[^\w\.\-]", "_", key) + ".npy"
+                np.save(tmp / fname, arr)
+                index[key] = {"file": fname, "shape": list(arr.shape),
+                              "dtype": str(arr.dtype)}
+            manifest = {"step": step, "index": index, "meta": meta,
+                        "time": time.time()}
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+        with self.tracer.span("commit", CHECKPOINT, step=step):
+            final = self.dir / name
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)                      # atomic publish
+            latest_tmp = self.dir / f".LATEST_{os.getpid()}"
+            latest_tmp.write_text(name)
+            latest_tmp.rename(self.dir / "LATEST")  # atomic pointer flip
+            self._gc()
 
     def wait(self):
         if self._thread is not None:

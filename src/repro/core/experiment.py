@@ -40,7 +40,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from functools import partial
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Tuple
@@ -53,6 +52,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from ..checkpoint.checkpointer import (Checkpointer, CheckpointPolicy,
                                        atomic_write_text)
 from ..distributed.sharding import data_parallel_width, make_staging_put
+from ..obs import (ACCESS, COMPUTE, EPOCH, GATHER as GATHER_LANE, H2D,
+                   NULL_TRACER, Timeline, TracePolicy, Tracer)
 from . import samplers
 from .erm import ERMProblem, LOGISTIC, SMOOTH_HINGE, SQUARE
 from .solvers import (CONSTANT, LINE_SEARCH, SOLVERS, SolverConfig,
@@ -185,6 +186,14 @@ class ExperimentSpec:
     # reconstructs a resumable RunResult after a crash, including ELASTIC
     # restore of a 'gather'-mode sharded run onto a different mesh width.
     checkpoint: Optional[CheckpointPolicy] = None
+    # observability: a TracePolicy makes execute() record span timelines
+    # (access / h2d / compute / checkpoint / gather lanes) + a metrics
+    # registry into RunResult.timeline, exportable as Chrome/Perfetto trace
+    # JSON via RunResult.save_trace (or automatically to policy.path).
+    # Deliberately EXCLUDED from the plan fingerprint: tracing never
+    # changes what a run computes, so a checkpointed run may resume with
+    # tracing toggled either way.
+    trace: Optional[TracePolicy] = None
 
     @property
     def problem(self) -> ERMProblem:
@@ -363,6 +372,15 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
             spec.checkpoint.validate()
         except ValueError as e:
             raise PlanError(str(e)) from e
+    if spec.trace is not None:
+        if not isinstance(spec.trace, TracePolicy):
+            raise PlanError(
+                f"trace= wants a repro.obs.TracePolicy, "
+                f"got {type(spec.trace).__name__}")
+        try:
+            spec.trace.validate()
+        except ValueError as e:
+            raise PlanError(str(e)) from e
 
     probe = _probe(spec.data)
     if spec.batch_size > probe.rows:
@@ -524,6 +542,15 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
         why.append(f"durable run: checkpoint every {pol.every} epoch(s) to "
                    f"{pol.directory} (keep {pol.keep}, "
                    f"{'async' if pol.async_save else 'blocking'} saves)")
+    if spec.trace is not None:
+        tp = spec.trace
+        why.append(
+            ("traced run: span timeline over a "
+             f"{tp.buffer}-event ring buffer"
+             + (f", Chrome trace to {tp.path}" if tp.path else ""))
+            if tp.enabled else
+            "trace policy present but disabled → near-zero-cost no-op "
+            "spans (the A/B overhead knob)")
     cfg = SolverConfig(solver=spec.solver, step_mode=spec.step_mode,
                        step_size=step_size, ls_shrink=spec.ls_shrink,
                        ls_c=spec.ls_c, ls_max_iter=spec.ls_max_iter,
@@ -597,6 +624,10 @@ class RunResult:
     stats: "AccessStats"       # noqa: F821 — repro.data.pipeline.AccessStats
     train_s: float
     compute_s: float
+    # span timeline of THIS execute() call (same per-call basis as stats),
+    # present when the spec carried an enabled TracePolicy; results rebuilt
+    # by from_json carry the metrics snapshot with no span events
+    timeline: Optional[Timeline] = None
 
     def breakdown(self) -> Dict[str, float]:
         """Per-epoch wall-clock decomposition in the BENCH_erm schema."""
@@ -626,15 +657,96 @@ class RunResult:
                        gather_s_per_epoch=st.gather_s / e)
         return out
 
+    def save_trace(self, path) -> Path:
+        """Write the span timeline as Chrome/Perfetto trace-event JSON —
+        open it in ``chrome://tracing`` or https://ui.perfetto.dev."""
+        if self.timeline is None or not self.timeline.events:
+            raise ValueError(
+                "this result carries no span timeline — run with "
+                "ExperimentSpec.trace=TracePolicy() (results rebuilt from "
+                "JSON carry only the metrics snapshot)")
+        return self.timeline.save(path)
+
+    def verify_timeline(self, tol: float = 0.05) -> Dict[str, Dict]:
+        """Assert the span timeline reconciles with the stats accounting.
+
+        Two layers of invariant, both returned in the report (and raised
+        as one ``ValueError`` naming every violation):
+
+        * **exact basis** — each accounting lane's toplevel span sum IS the
+          sum of the measurements :class:`AccessStats` booked (they share
+          the ``timespan`` measurement by construction), so access / h2d /
+          gather lanes match ``stats`` and the compute lane matches
+          ``compute_s`` to float noise;
+        * **breakdown** — the per-epoch estimates of :meth:`breakdown`
+          times ``epochs_run`` match the lane sums within ``tol``.  On a
+          streamed run the trace additionally records the prefetch
+          producer's overrun reads (a few batches past the last one the
+          epoch loop consumed) which :meth:`breakdown`'s steady-state
+          per-batch estimator deliberately excludes, so the access
+          comparison is made in per-batch units — the overrun is a fixed
+          few batches, which would swamp ``tol`` on an 8-batch smoke run
+          while being invisible on a real one.
+        """
+        if self.timeline is None or not self.timeline.events:
+            raise ValueError(
+                "no span timeline to verify — run with "
+                "ExperimentSpec.trace=TracePolicy()")
+        if self.timeline.dropped:
+            raise ValueError(
+                f"{self.timeline.dropped} spans were evicted from the ring "
+                f"buffer; lane sums would undercount — raise "
+                f"TracePolicy.buffer")
+        lanes = self.timeline.lane_totals()
+        st, e = self.stats, max(self.epochs_run, 1)
+        bd = self.breakdown()
+        report: Dict[str, Dict] = {}
+        bad: List[str] = []
+
+        def check(name: str, span_s: float, ref_s: float, rel: float):
+            slack = max(rel * max(abs(ref_s), abs(span_s)), 1e-4)
+            ok = abs(span_s - ref_s) <= slack
+            report[name] = {"span_s": span_s, "ref_s": ref_s, "ok": ok}
+            if not ok:
+                bad.append(f"{name}: span sum {span_s:.6f}s vs reference "
+                           f"{ref_s:.6f}s (tolerance {slack:.6f}s)")
+
+        check("access_vs_stats", lanes.get(ACCESS, 0.0), st.access_s, 1e-6)
+        check("h2d_vs_stats", lanes.get(H2D, 0.0), st.h2d_s, 1e-6)
+        check("gather_vs_stats", lanes.get(GATHER_LANE, 0.0), st.gather_s,
+              1e-6)
+        check("compute_vs_stats", lanes.get(COMPUTE, 0.0), self.compute_s,
+              1e-6)
+        access_span = lanes.get(ACCESS, 0.0)
+        if self.plan.placement != RESIDENT and st.batches > 0:
+            # per-batch units: scale the span sum down to the m*e batches
+            # breakdown() accounts for (the remainder is producer overrun)
+            consumed = self.plan.num_batches * e
+            access_span *= min(1.0, consumed / st.batches)
+        check("access_vs_breakdown", access_span,
+              bd["access_s_per_epoch"] * e, tol)
+        check("h2d_vs_breakdown", lanes.get(H2D, 0.0),
+              bd["h2d_s_per_epoch"] * e, tol)
+        check("compute_vs_breakdown", lanes.get(COMPUTE, 0.0),
+              bd["compute_s_per_epoch"] * e, tol)
+        if bad:
+            raise ValueError(
+                "span timeline does not reconcile with the access/compute "
+                "accounting:\n  " + "\n  ".join(bad))
+        return report
+
     def to_json(self) -> Dict:
         """JSON-safe summary (the CI artifact schema) — resumable state is
         the sampler side only; the solver pytree stays in memory (or on
         disk, when the spec carries a :class:`CheckpointPolicy`).  Schema 2
         adds ``w``/``train_s``/``compute_s`` so :meth:`from_json` can
-        rebuild the full summary surface, per-device stats included."""
+        rebuild the full summary surface, per-device stats included;
+        schema 3 adds the ``metrics`` block (counter/gauge/histogram
+        snapshot of a traced run — ``{}`` untraced; span events stay in
+        the separate Chrome-trace artifact, see :meth:`save_trace`)."""
         p = self.plan
         return {
-            "schema": 2,
+            "schema": 3,
             "backend": p.backend,
             "plan": {"placement": p.placement, "kernel": p.kernel,
                      "format": p.fmt, "solver": p.cfg.solver,
@@ -660,6 +772,8 @@ class RunResult:
             "stats": {**dataclasses.asdict(self.stats),
                       "h2d_bytes_per_device":
                           self.stats.h2d_bytes_per_device},
+            "metrics": (self.timeline.metrics
+                        if self.timeline is not None else {}),
         }
 
     def save_json(self, path) -> Path:
@@ -698,6 +812,11 @@ class RunResult:
         fields = {f.name for f in dataclasses.fields(pipemod.AccessStats)}
         stats = pipemod.AccessStats(**{k: v for k, v in d["stats"].items()
                                        if k in fields})
+        # schema 3 carries the metrics snapshot; span events live in the
+        # separate Chrome-trace artifact, so the rebuilt timeline is
+        # metrics-only (to_json round-trips bit-for-bit either way)
+        metrics = d.get("metrics") or {}
+        timeline = Timeline(events=[], metrics=metrics) if metrics else None
         return RunResult(
             plan=plan_, objective=d["objective"],
             history=np.asarray(d["history"]),
@@ -705,7 +824,8 @@ class RunResult:
             sampler_state=d["sampler_state"],
             epochs_run=d["epochs_run"],
             epochs_done=d["epochs_done"], stats=stats,
-            train_s=d["train_s"], compute_s=d["compute_s"])
+            train_s=d["train_s"], compute_s=d["compute_s"],
+            timeline=timeline)
 
 
 # ---------------------------------------------------------------------------
@@ -815,10 +935,12 @@ class _RunCheckpointer:
     next epoch when the policy is async.
     """
 
-    def __init__(self, plan_: ExecutionPlan, done0: int, epochs: int):
+    def __init__(self, plan_: ExecutionPlan, done0: int, epochs: int,
+                 tracer=NULL_TRACER):
         self.pol = plan_.spec.checkpoint
         self.ck = (Checkpointer(self.pol.directory, keep=self.pol.keep,
-                                async_save=self.pol.async_save)
+                                async_save=self.pol.async_save,
+                                tracer=tracer)
                    if self.pol is not None else None)
         self.plan = plan_
         self.done0 = done0
@@ -902,9 +1024,19 @@ def execute(plan_: ExecutionPlan, *, resume: Optional[RunResult] = None,
                 + "\n  ".join(diffs
                               or ["(plans compare unequal with no "
                                   "field-level difference)"]))
+    pol = plan_.spec.trace
+    tracer = pol.make_tracer() if pol is not None else NULL_TRACER
     if plan_.placement == RESIDENT:
-        return _execute_resident(plan_, resume, epochs)
-    return _execute_streamed(plan_, resume, epochs)
+        result = _execute_resident(plan_, resume, epochs, tracer)
+    else:
+        result = _execute_streamed(plan_, resume, epochs, tracer)
+    if tracer.enabled:
+        # the timeline is PER-CALL, like stats: each segment of a resumed
+        # run carries (and, below, writes) its own trace
+        result.timeline = tracer.timeline()
+        if pol.path is not None:
+            result.timeline.save(pol.path)
+    return result
 
 
 def run_experiment(spec: ExperimentSpec) -> RunResult:
@@ -955,8 +1087,9 @@ def _pad_rows(a: np.ndarray, to_rows: int) -> np.ndarray:
 
 
 def _stage_resident_sharded(plan_: ExecutionPlan, Xh: np.ndarray,
-                            yh: np.ndarray, stats) -> Tuple[jax.Array,
-                                                            jax.Array, float]:
+                            yh: np.ndarray, stats,
+                            tracer=NULL_TRACER) -> Tuple[jax.Array,
+                                                         jax.Array, float]:
     """Stage a host corpus across the mesh: zero-pad the rows so they shard
     evenly, place each device's slice over the host link (the same
     ``make_staging_put`` the streamed stager uses), and — in 'gather' mode —
@@ -972,19 +1105,21 @@ def _stage_resident_sharded(plan_: ExecutionPlan, Xh: np.ndarray,
     Xh, yh = _pad_rows(Xh, lpad), _pad_rows(yh, lpad)
     stats.shards = max(stats.shards, shards)
     put = make_staging_put(mesh, (("batch", None), ("batch",)),
-                           gather=plan_.reduction == GATHER, stats=stats)
-    t0 = time.perf_counter()
-    X, y = put((Xh, yh))
-    if plan_.reduction == GATHER and lpad != rows:
-        X, y = jax.block_until_ready((_trim_rows(X, rows),
-                                      _trim_rows(y, rows)))
-    h2d_dt = time.perf_counter() - t0
+                           gather=plan_.reduction == GATHER, stats=stats,
+                           tracer=tracer)
+    with tracer.timespan("stage_resident", H2D, bytes=nbytes,
+                         shards=shards) as sp:
+        X, y = put((Xh, yh))
+        if plan_.reduction == GATHER and lpad != rows:
+            X, y = jax.block_until_ready((_trim_rows(X, rows),
+                                          _trim_rows(y, rows)))
+    h2d_dt = sp.dur
     stats.record_h2d(h2d_dt, nbytes)
     return X, y, h2d_dt
 
 
 def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
-                      epochs: int) -> RunResult:
+                      epochs: int, tracer: Tracer = NULL_TRACER) -> RunResult:
     from ..data import pipeline as pipemod
 
     spec, cfg = plan_.spec, plan_.cfg
@@ -997,14 +1132,16 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
         if sharded:
             Xh = np.ascontiguousarray(np.asarray(spec.data.X, np.float32))
             yh = np.ascontiguousarray(np.asarray(spec.data.y, np.float32))
-            X, y, h2d_dt = _stage_resident_sharded(plan_, Xh, yh, stats)
+            X, y, h2d_dt = _stage_resident_sharded(plan_, Xh, yh, stats,
+                                                   tracer)
         else:
             X = jnp.asarray(spec.data.X, jnp.float32)
             y = jnp.asarray(spec.data.y, jnp.float32)
     else:
         pipe = pipemod.DataPipeline(pipemod.PipelineConfig(
             corpus=spec.data.path, batch_size=spec.batch_size,
-            sampling=spec.scheme, seed=spec.seed, prefetch=0, resident=True))
+            sampling=spec.scheme, seed=spec.seed, prefetch=0, resident=True),
+            tracer=tracer)
         stats = pipe.stats
         rows = pipe.read_all()
         n = plan_.features
@@ -1013,12 +1150,14 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
         Xh = np.ascontiguousarray(rows[:, :n])
         yh = np.ascontiguousarray(rows[:, n])
         if sharded:
-            X, y, h2d_dt = _stage_resident_sharded(plan_, Xh, yh, stats)
+            X, y, h2d_dt = _stage_resident_sharded(plan_, Xh, yh, stats,
+                                                   tracer)
         else:
-            t0 = time.perf_counter()
-            X, y = jax.block_until_ready((jax.device_put(Xh),
-                                          jax.device_put(yh)))
-            h2d_dt = time.perf_counter() - t0
+            with tracer.timespan("stage_resident", H2D,
+                                 bytes=Xh.nbytes + yh.nbytes) as sp:
+                X, y = jax.block_until_ready((jax.device_put(Xh),
+                                              jax.device_put(yh)))
+            h2d_dt = sp.dur
             stats.record_h2d(h2d_dt, Xh.nbytes + yh.nbytes)
 
     # 'psum' keeps the padded corpus sharded through the scan, so the epoch
@@ -1069,16 +1208,26 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
     history: List[float] = []
     compute_s = 0.0
     train_s = 0.0
-    rck = _RunCheckpointer(plan_, done0, epochs)
+    rck = _RunCheckpointer(plan_, done0, epochs, tracer)
     try:
         for e in range(epochs):
             key, sub = jax.random.split(key)
-            tc = time.perf_counter()
-            state = epoch_fn(state, X, y, sub)
-            jax.block_until_ready(state.w)
-            dt = time.perf_counter() - tc
+            # the whole epoch is ONE device call here, so the compute span
+            # is the epoch; VectorizedLS trial ladders run fused inside the
+            # jit, so the span carries the step rule as an attribute and
+            # the ladder count lands on the ls.invocations counter below
+            with tracer.span("epoch", EPOCH, epoch=done0 + e):
+                with tracer.timespan("resident_epoch", COMPUTE,
+                                     epoch=done0 + e,
+                                     step_rule=plan_.step_rule) as sp:
+                    state = epoch_fn(state, X, y, sub)
+                    jax.block_until_ready(state.w)
+            dt = sp.dur
             compute_s += dt
             train_s += dt
+            if cfg.step_mode == LINE_SEARCH:
+                tracer.metrics.counter("ls.invocations").inc(
+                    plan_.num_batches)
             if spec.data.kind != ARRAYS and e > 0:
                 # every epoch after the first of THIS call would have
                 # restaged the corpus (a resumed call pays its own staging,
@@ -1109,7 +1258,7 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
 # ---- streamed backends -----------------------------------------------------
 
 def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
-                      epochs: int) -> RunResult:
+                      epochs: int, tracer: Tracer = NULL_TRACER) -> RunResult:
     from ..data import pipeline as pipemod
 
     spec, cfg = plan_.spec, plan_.cfg
@@ -1127,7 +1276,8 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
         from ..data import sparse
         csr = sparse.open_csr_corpus(spec.data.path)
         kmax = plan_.kmax if plan_.kmax else csr.kmax
-        pipe = sparse.SparsePipeline(pcfg, start_step=start_step)
+        pipe = sparse.SparsePipeline(pcfg, start_step=start_step,
+                                     tracer=tracer)
 
         def alloc(k):
             return (np.empty((k, b, kmax), np.int32),
@@ -1151,7 +1301,8 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
     else:
         from ..data import dataset
         mm, _ = dataset.open_corpus(spec.data.path)
-        pipe = pipemod.DataPipeline(pcfg, start_step=start_step)
+        pipe = pipemod.DataPipeline(pcfg, start_step=start_step,
+                                    tracer=tracer)
 
         def alloc(k):
             return (np.empty((k, b, n), np.float32),
@@ -1233,7 +1384,7 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
 
     # cumulative trace across resumes, as in the resident path
     prefix = [] if resume is None else [float(h) for h in resume.history]
-    rck = _RunCheckpointer(plan_, done0, epochs)
+    rck = _RunCheckpointer(plan_, done0, epochs, tracer)
 
     def on_epoch(e, st, hist):
         # deterministic count of CONSUMED batches — the prefetch producer
@@ -1249,7 +1400,12 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
             start_step=start_step, alloc=alloc, fill=fill,
             snapshot_begin=snapshot_begin, eval_fn=eval_fn,
             mesh=spec.mesh if sharded else None, batch_axes=batch_axes,
-            gather=bool(gather), on_epoch=on_epoch)
+            gather=bool(gather), on_epoch=on_epoch, tracer=tracer,
+            epoch0=done0, step_rule=plan_.step_rule)
+        if cfg.step_mode == LINE_SEARCH:
+            # the trial ladder runs fused inside the chunk jit (one ladder
+            # per batch), so the driver books the invocation count
+            tracer.metrics.counter("ls.invocations").inc(m * epochs)
     finally:
         rck.finish()
 
@@ -1270,6 +1426,8 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
                    eval_fn: Optional[Callable], mesh: Optional[Mesh] = None,
                    batch_axes=None, gather: bool = False,
                    on_epoch: Optional[Callable] = None,
+                   tracer: Tracer = NULL_TRACER, epoch0: int = 0,
+                   step_rule: Optional[str] = None,
                    ) -> Tuple[SolverState, List[float], float, float]:
     """The shared streaming engine under the dense and sparse backends:
     group the pipeline's batch stream into <=K-batch chunks (never crossing
@@ -1309,29 +1467,38 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
         # reshards to replicated inside the staging thread
         stager = pipemod.DeviceStager(host_chunks(), convert=convert,
                                       depth=2, stats=pipe.stats, mesh=mesh,
-                                      batch_axes=batch_axes, gather=gather)
+                                      batch_axes=batch_axes, gather=gather,
+                                      tracer=tracer)
     else:
         stager = pipemod.DeviceStager(host_chunks(), put=_put_blocking,
                                       convert=convert, depth=2,
-                                      stats=pipe.stats)
+                                      stats=pipe.stats, tracer=tracer)
     chunks_iter = iter(stager)
     history: List[float] = []
     compute_s = 0.0
     train_s = 0.0
     try:
         for e in range(epochs):
-            te = time.perf_counter()
-            if snapshot_begin is not None:
-                state = snapshot_begin(state)
-            done = 0
-            while done < m:
-                args = next(chunks_iter)
-                tc = time.perf_counter()
-                state = epoch_fn(state, *args)
-                jax.block_until_ready(state.w)
-                compute_s += time.perf_counter() - tc
-                done += args[0].shape[0]
-            train_s += time.perf_counter() - te
+            # the epoch timespan IS the train_s measurement (snapshot
+            # refresh + chunk waits + device calls; eval/checkpoint hooks
+            # stay outside, as before); each chunk's device call is its
+            # own compute span — the same dur feeds compute_s
+            with tracer.timespan("train_epoch", EPOCH,
+                                 epoch=epoch0 + e) as se:
+                if snapshot_begin is not None:
+                    state = snapshot_begin(state)
+                done = 0
+                while done < m:
+                    args = next(chunks_iter)
+                    with tracer.timespan("chunk", COMPUTE,
+                                         epoch=epoch0 + e, first_batch=done,
+                                         step_rule=step_rule) as sc:
+                        state = epoch_fn(state, *args)
+                        jax.block_until_ready(state.w)
+                        sc.set(batches=int(args[0].shape[0]))
+                    compute_s += sc.dur
+                    done += args[0].shape[0]
+            train_s += se.dur
             if eval_fn is not None:
                 history.append(float(eval_fn(state.w)))   # untimed
             if on_epoch is not None:

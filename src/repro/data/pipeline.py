@@ -25,13 +25,13 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-import time
 from pathlib import Path
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
 from ..core import samplers
+from ..obs import ACCESS, H2D, NULL_TRACER
 from .dataset import CorpusMeta, host_shard, open_corpus
 
 
@@ -214,9 +214,11 @@ class PrefetchPipeline:
 class DataPipeline(PrefetchPipeline):
     """Iterator over host-local mini-batches of corpus rows."""
 
-    def __init__(self, cfg: PipelineConfig, start_step: int = 0):
+    def __init__(self, cfg: PipelineConfig, start_step: int = 0,
+                 tracer=NULL_TRACER):
         super().__init__(cfg.prefetch)
         self.cfg = cfg
+        self.tracer = tracer
         self.mm, self.meta = open_corpus(cfg.corpus)
         lo, hi = host_shard(self.meta.rows, cfg.host, cfg.num_hosts)
         self.lo, self.hi = lo, hi
@@ -226,25 +228,31 @@ class DataPipeline(PrefetchPipeline):
         self.stats = AccessStats()
 
     def _read_batch(self) -> np.ndarray:
-        t0 = time.perf_counter()
-        if self.sampler.scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
-            start, self.sampler = samplers.next_block_start(self.sampler)
-            b = self.cfg.batch_size
-            if start + b <= self.hi - self.lo:
-                # np.array, not asarray: a memmap slice is a lazy VIEW, and
-                # the timed region must actually fault the pages in or the
-                # recorded access time is just pointer arithmetic (the RS
-                # branch's fancy indexing always copies — same basis)
-                rows = np.array(self.mm[self.lo + start:self.lo + start + b])
-            else:  # wrap-around at shard end: two contiguous reads
-                first = self.hi - self.lo - start
-                rows = np.concatenate([
-                    np.asarray(self.mm[self.lo + start:self.hi]),
-                    np.asarray(self.mm[self.lo:self.lo + b - first])])
-        else:
-            idx, self.sampler = samplers.next_batch(self.sampler)
-            rows = np.asarray(self.mm[self.lo + idx])   # scattered gather
-        self.stats.record(time.perf_counter() - t0, rows.nbytes)
+        # timespan, not a raw perf_counter pair: the span's duration IS the
+        # number booked into AccessStats, so trace and stats cannot drift
+        with self.tracer.timespan("read", ACCESS,
+                                  scheme=self.sampler.scheme) as sp:
+            if self.sampler.scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
+                start, self.sampler = samplers.next_block_start(self.sampler)
+                b = self.cfg.batch_size
+                if start + b <= self.hi - self.lo:
+                    # np.array, not asarray: a memmap slice is a lazy VIEW,
+                    # and the timed region must actually fault the pages in
+                    # or the recorded access time is just pointer arithmetic
+                    # (the RS branch's fancy indexing always copies — same
+                    # basis)
+                    rows = np.array(
+                        self.mm[self.lo + start:self.lo + start + b])
+                else:  # wrap-around at shard end: two contiguous reads
+                    first = self.hi - self.lo - start
+                    rows = np.concatenate([
+                        np.asarray(self.mm[self.lo + start:self.hi]),
+                        np.asarray(self.mm[self.lo:self.lo + b - first])])
+            else:
+                idx, self.sampler = samplers.next_batch(self.sampler)
+                rows = np.asarray(self.mm[self.lo + idx])  # scattered gather
+            sp.set(bytes=rows.nbytes)
+        self.stats.record(sp.dur, rows.nbytes)
         return rows
 
     # ---- resident (fused host) mode -------------------------------------
@@ -261,11 +269,13 @@ class DataPipeline(PrefetchPipeline):
             raise RuntimeError(
                 "prefetch producer is active; resident staging and batch "
                 "streaming are mutually exclusive on one pipeline")
-        t0 = time.perf_counter()
-        # forced copy: a memmap view would defer the actual read to the
-        # device_put that follows, silently booking disk time as H2D
-        rows = np.array(self.mm[self.lo:self.hi])
-        self.stats.record(time.perf_counter() - t0, rows.nbytes)
+        with self.tracer.timespan("read_all", ACCESS,
+                                  scheme=self.sampler.scheme) as sp:
+            # forced copy: a memmap view would defer the actual read to the
+            # device_put that follows, silently booking disk time as H2D
+            rows = np.array(self.mm[self.lo:self.hi])
+            sp.set(bytes=rows.nbytes)
+        self.stats.record(sp.dur, rows.nbytes)
         return rows
 
 
@@ -324,7 +334,8 @@ class DeviceStager:
 
     def __init__(self, source: Iterator, put=None, convert=None,
                  depth: int = 2, stats: Optional[AccessStats] = None,
-                 mesh=None, batch_axes=None, gather: bool = False):
+                 mesh=None, batch_axes=None, gather: bool = False,
+                 tracer=NULL_TRACER):
         if put is None:
             if mesh is None:
                 raise ValueError("DeviceStager needs either put= or mesh=")
@@ -336,11 +347,12 @@ class DeviceStager:
                                                 make_staging_put)
             stats = stats if stats is not None else AccessStats()
             put = make_staging_put(mesh, batch_axes, gather=gather,
-                                   stats=stats)
+                                   stats=stats, tracer=tracer)
             stats.shards = max(stats.shards, data_parallel_width(mesh))
         elif mesh is not None:
             raise ValueError("pass either put= or mesh=, not both")
         self.source = source
+        self.tracer = tracer
         self.put = put
         self.convert = convert or (lambda x: x)
         self.depth = max(1, depth)
@@ -363,10 +375,10 @@ class DeviceStager:
                 if self._stop.is_set():
                     return
                 host = self.convert(batch)
-                t0 = time.perf_counter()
-                dev = self.put(host)
-                self.stats.record_h2d(time.perf_counter() - t0,
-                                      self._nbytes(host))
+                nbytes = self._nbytes(host)
+                with self.tracer.timespan("stage", H2D, bytes=nbytes) as sp:
+                    dev = self.put(host)
+                self.stats.record_h2d(sp.dur, nbytes)
                 while not self._stop.is_set():
                     try:
                         self._q.put(dev, timeout=0.1)

@@ -39,7 +39,6 @@ module dependency-free otherwise.
 from __future__ import annotations
 
 import dataclasses
-import time
 from pathlib import Path
 from typing import IO, NamedTuple, Optional, Tuple
 
@@ -52,6 +51,7 @@ except ImportError:        # pure-numpy fallback below
 
 from ..core import samplers
 from ..core.erm import LOGISTIC, SMOOTH_HINGE, SQUARE
+from ..obs import ACCESS, CONVERT, NULL_TRACER
 from .dataset import CorpusMeta, host_shard
 from .pipeline import AccessStats, PipelineConfig, PrefetchPipeline
 
@@ -330,9 +330,11 @@ class SparsePipeline(PrefetchPipeline):
     actually touched (nnz-proportional).
     """
 
-    def __init__(self, cfg: PipelineConfig, start_step: int = 0):
+    def __init__(self, cfg: PipelineConfig, start_step: int = 0,
+                 tracer=NULL_TRACER):
         super().__init__(cfg.prefetch)
         self.cfg = cfg
+        self.tracer = tracer
         self.csr = open_csr_corpus(cfg.corpus)
         self.meta = self.csr.meta
         lo, hi = host_shard(self.meta.rows, cfg.host, cfg.num_hosts)
@@ -358,54 +360,61 @@ class SparsePipeline(PrefetchPipeline):
         return flat_c, flat_v, np.diff(ptr), ptr[:-1] - ptr[0], y, ptr
 
     def _read_batch(self) -> SparseBatch:
-        # the timed region covers the READS only (indptr, indices, values,
+        # the timed span covers the READS only (indptr, indices, values,
         # labels — what the access pattern governs); the ELL padding below
         # is batch FORMATTING, the sparse analogue of the dense path's
-        # rows->(X, y) convert, which also runs outside the access timer
-        t0 = time.perf_counter()
-        csr, b = self.csr, self.cfg.batch_size
-        if self.sampler.scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
-            start, self.sampler = samplers.next_block_start(self.sampler)
-            r0 = self.lo + start
-            if start + b <= self.hi - self.lo:
-                fc, fv, lens, offs, y, ptr = self._read_rows_contiguous(
-                    r0, r0 + b)
-                touched_ptr = len(ptr)
-            else:  # wrap-around at shard end: two contiguous segment reads
-                first = self.hi - r0
-                a = self._read_rows_contiguous(r0, self.hi)
-                c = self._read_rows_contiguous(self.lo, self.lo + b - first)
-                fc = np.concatenate([a[0], c[0]])
-                fv = np.concatenate([a[1], c[1]])
-                lens = np.concatenate([a[2], c[2]])
-                offs = np.concatenate([a[3], len(a[0]) + c[3]])
-                y = np.concatenate([a[4], c[4]])
-                touched_ptr = len(a[5]) + len(c[5])
-            nnz = int(lens.sum())
-            nbytes = (nnz * self._itemsize
-                      + touched_ptr * csr.indptr.itemsize
-                      + y.nbytes)
-        else:   # RS: b scattered row-segment gathers
-            idx, self.sampler = samplers.next_batch(self.sampler)
-            rows = self.lo + idx
-            starts = np.asarray(csr.indptr[rows])     # fancy-index: copies
-            lens = np.asarray(csr.indptr[rows + 1]) - starts
-            nnz = int(lens.sum())
-            offs = np.cumsum(lens) - lens
-            # element ids of every nonzero in the batch — still SCATTERED
-            # segments of indices/values, but gathered in one vectorized
-            # fancy-index so the timed region measures storage access, not
-            # a Python per-row loop (the dense RS path is vectorized too)
-            elem = (starts.repeat(lens)
-                    + np.arange(nnz, dtype=np.int64) - offs.repeat(lens))
-            fc = np.asarray(csr.indices[elem])
-            fv = np.asarray(csr.values[elem])
-            y = np.asarray(csr.labels[rows])
-            nbytes = (nnz * self._itemsize
-                      + 2 * b * csr.indptr.itemsize   # per-row (start, end)
-                      + y.nbytes)
-        self.stats.record(time.perf_counter() - t0, nbytes)
-        cols, vals = _pad_segments(fc, fv, lens, offs, self.kmax)
+        # rows->(X, y) convert, so it rides the separate `convert` lane and
+        # never inflates access accounting.  The span's duration is the
+        # number booked into AccessStats — trace and stats cannot drift.
+        with self.tracer.timespan("read", ACCESS,
+                                  scheme=self.sampler.scheme) as sp:
+            csr, b = self.csr, self.cfg.batch_size
+            if self.sampler.scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
+                start, self.sampler = samplers.next_block_start(self.sampler)
+                r0 = self.lo + start
+                if start + b <= self.hi - self.lo:
+                    fc, fv, lens, offs, y, ptr = self._read_rows_contiguous(
+                        r0, r0 + b)
+                    touched_ptr = len(ptr)
+                else:  # wrap-around at shard end: two contiguous reads
+                    first = self.hi - r0
+                    a = self._read_rows_contiguous(r0, self.hi)
+                    c = self._read_rows_contiguous(self.lo,
+                                                   self.lo + b - first)
+                    fc = np.concatenate([a[0], c[0]])
+                    fv = np.concatenate([a[1], c[1]])
+                    lens = np.concatenate([a[2], c[2]])
+                    offs = np.concatenate([a[3], len(a[0]) + c[3]])
+                    y = np.concatenate([a[4], c[4]])
+                    touched_ptr = len(a[5]) + len(c[5])
+                nnz = int(lens.sum())
+                nbytes = (nnz * self._itemsize
+                          + touched_ptr * csr.indptr.itemsize
+                          + y.nbytes)
+            else:   # RS: b scattered row-segment gathers
+                idx, self.sampler = samplers.next_batch(self.sampler)
+                rows = self.lo + idx
+                starts = np.asarray(csr.indptr[rows])   # fancy-index: copies
+                lens = np.asarray(csr.indptr[rows + 1]) - starts
+                nnz = int(lens.sum())
+                offs = np.cumsum(lens) - lens
+                # element ids of every nonzero in the batch — still
+                # SCATTERED segments of indices/values, but gathered in one
+                # vectorized fancy-index so the timed region measures
+                # storage access, not a Python per-row loop (the dense RS
+                # path is vectorized too)
+                elem = (starts.repeat(lens)
+                        + np.arange(nnz, dtype=np.int64) - offs.repeat(lens))
+                fc = np.asarray(csr.indices[elem])
+                fv = np.asarray(csr.values[elem])
+                y = np.asarray(csr.labels[rows])
+                nbytes = (nnz * self._itemsize
+                          + 2 * b * csr.indptr.itemsize  # row (start, end)
+                          + y.nbytes)
+            sp.set(bytes=nbytes, nnz=nnz)
+        self.stats.record(sp.dur, nbytes)
+        with self.tracer.span("ell_pad", CONVERT, nnz=nnz):
+            cols, vals = _pad_segments(fc, fv, lens, offs, self.kmax)
         return SparseBatch(cols, vals, y.astype(np.float32), nnz)
 
 

@@ -362,7 +362,7 @@ def staging_shardings(mesh: Mesh, batch_axes: Sequence[Sequence[Logical]],
 
 
 def make_staging_put(mesh: Mesh, batch_axes: Sequence[Sequence[Logical]],
-                     gather: bool = False, stats=None):
+                     gather: bool = False, stats=None, tracer=None):
     """Build a ``put`` callable for :class:`repro.data.pipeline.DeviceStager`
     that places each host array as a GLOBAL array sharded on its batch axis
     (``jax.make_array_from_process_local_data``), so every device receives
@@ -376,8 +376,9 @@ def make_staging_put(mesh: Mesh, batch_axes: Sequence[Sequence[Logical]],
     single-host engines.  The gather time is recorded separately on
     ``stats`` (an :class:`~repro.data.pipeline.AccessStats`) so the H2D
     column keeps measuring the host link only."""
-    import time as _time
+    from ..obs import GATHER, NULL_TRACER
 
+    tracer = tracer if tracer is not None else NULL_TRACER
     replicated = NamedSharding(mesh, P())
 
     def put(host):
@@ -388,11 +389,14 @@ def make_staging_put(mesh: Mesh, batch_axes: Sequence[Sequence[Logical]],
             for a, s in zip(host, shardings))
         dev = jax.block_until_ready(dev)
         if gather:
-            t0 = _time.perf_counter()
-            dev = jax.block_until_ready(tuple(
-                jax.device_put(a, replicated) for a in dev))
+            # the tracer span IS the measurement booked into stats — the
+            # gather lane and gather_s cannot drift (they used to be two
+            # separate perf_counter pairs waiting to diverge)
+            with tracer.timespan("reshard", GATHER) as sp:
+                dev = jax.block_until_ready(tuple(
+                    jax.device_put(a, replicated) for a in dev))
             if stats is not None:
-                stats.record_gather(_time.perf_counter() - t0)
+                stats.record_gather(sp.dur)
         return dev
 
     return put

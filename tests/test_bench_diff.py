@@ -1,0 +1,116 @@
+"""benchmarks/bench_diff.py: the BENCH-json differ CI runs non-gating.
+
+Contracts: cells match by name across both files, ratios flag regressions
+past the threshold (and improvements past its inverse), workload-scale
+meta mismatches warn, degenerate inputs exit 2 instead of reporting a
+vacuous pass, and ``--gate`` is the only mode that turns a regression
+into a nonzero exit.
+"""
+import json
+
+import pytest
+
+from benchmarks.bench_diff import (diff_cells, load_bench, main,
+                                   meta_mismatches)
+
+
+def _bench(tmp_path, name, cells, meta=None):
+    path = tmp_path / name
+    path.write_text(json.dumps(
+        {"meta": meta or {"rows": 100, "epochs": 3},
+         "results": cells}))
+    return path
+
+
+def _cell(name, epoch_s, access_s=0.01):
+    return {"name": name, "epoch_s": epoch_s,
+            "access_s_per_epoch": access_s}
+
+
+def test_load_bench_rejects_non_bench_documents(tmp_path):
+    p = tmp_path / "x.json"
+    p.write_text(json.dumps({"foo": 1}))
+    with pytest.raises(ValueError):
+        load_bench(p)
+    p.write_text(json.dumps({"results": []}))
+    with pytest.raises(ValueError):
+        load_bench(p)
+
+
+def test_load_bench_reads_committed_baselines():
+    from tests.util import REPO
+    meta, cells = load_bench(REPO / "benchmarks" / "BENCH_erm.json")
+    assert cells and all("epoch_s" in c for c in cells.values())
+
+
+def test_diff_flags_regressions_and_improvements():
+    base = {"a": _cell("a", 1.0), "b": _cell("b", 1.0),
+            "c": _cell("c", 1.0)}
+    new = {"a": _cell("a", 1.5), "b": _cell("b", 0.5),
+           "c": _cell("c", 1.1)}
+    rows, regs = diff_cells(base, new, ("epoch_s",), threshold=0.25)
+    flags = {r[0]: r[5] for r in rows}
+    assert flags == {"a": "REGRESSED", "b": "improved", "c": ""}
+    assert [r[0] for r in regs] == ["a"]
+
+
+def test_diff_zero_baseline_and_missing_metrics():
+    base = {"a": _cell("a", 1.0, access_s=0.0),
+            "b": {"name": "b"}}           # budget-cut cell: no timings
+    new = {"a": _cell("a", 1.0, access_s=0.02),
+           "b": _cell("b", 1.0)}
+    rows, regs = diff_cells(base, new, ("epoch_s", "access_s_per_epoch"),
+                            threshold=0.25)
+    by = {(r[0], r[1]): r for r in rows}
+    # zero -> nonzero is an infinite-ratio regression, not a divide crash
+    assert by[("a", "access_s_per_epoch")][4] == float("inf")
+    assert by[("a", "access_s_per_epoch")][5] == "REGRESSED"
+    # the cut cell contributes no epoch_s comparison at all
+    assert ("b", "epoch_s") not in by
+    assert [(r[0], r[1]) for r in regs] == [("a", "access_s_per_epoch")]
+
+
+def test_meta_mismatch_warns_on_scale_keys_only():
+    assert meta_mismatches({"rows": 100}, {"rows": 200}) \
+        == ["rows: 100 -> 200"]
+    assert meta_mismatches({"rows": 100, "schema": 1},
+                           {"rows": 100, "schema": 2}) == []
+
+
+def test_main_self_diff_is_clean(tmp_path, capsys):
+    p = _bench(tmp_path, "b.json", [_cell("a", 1.0)])
+    assert main([str(p), str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "0 regression(s)" in out and "REGRESSED" not in out
+
+
+def test_main_gate_flips_exit_on_regression(tmp_path, capsys):
+    base = _bench(tmp_path, "base.json", [_cell("a", 1.0)])
+    new = _bench(tmp_path, "new.json", [_cell("a", 2.0)])
+    assert main([str(base), str(new)]) == 0          # report-only default
+    assert main([str(base), str(new), "--gate"]) == 1
+    assert "REGRESSION a.epoch_s" in capsys.readouterr().out
+
+
+def test_main_reports_added_and_removed_cells(tmp_path, capsys):
+    base = _bench(tmp_path, "base.json", [_cell("a", 1.0), _cell("x", 1.0)])
+    new = _bench(tmp_path, "new.json", [_cell("a", 1.0), _cell("y", 1.0)])
+    assert main([str(base), str(new)]) == 0
+    out = capsys.readouterr().out
+    assert "# added cell: y" in out and "# removed cell: x" in out
+
+
+def test_main_errors_on_disjoint_or_unreadable_inputs(tmp_path, capsys):
+    base = _bench(tmp_path, "base.json", [_cell("a", 1.0)])
+    new = _bench(tmp_path, "new.json", [_cell("z", 1.0)])
+    assert main([str(base), str(new)]) == 2          # vacuous diff != pass
+    assert main([str(base), str(tmp_path / "missing.json")]) == 2
+
+
+def test_main_warns_on_meta_scale_mismatch(tmp_path, capsys):
+    base = _bench(tmp_path, "base.json", [_cell("a", 1.0)],
+                  meta={"rows": 100})
+    new = _bench(tmp_path, "new.json", [_cell("a", 1.0)],
+                 meta={"rows": 10_000})
+    assert main([str(base), str(new)]) == 0
+    assert "WARNING meta differs" in capsys.readouterr().out
