@@ -10,8 +10,10 @@ a regression.
 
 CI runs this NON-GATING against the committed baseline (fresh timings on
 a shared runner drift far more than a code change does — the output is a
-reviewer signal, not a merge gate); ``--gate`` turns regressions into a
-nonzero exit for local A/B runs on a quiet machine:
+reviewer signal, not a merge gate); ``--gate`` turns regressions AND
+baseline cells missing a name-matched counterpart into a nonzero exit
+for local A/B runs on a quiet machine (a cell that vanishes from the
+matrix must fail the gate, not dodge it):
 
   python benchmarks/bench_diff.py benchmarks/BENCH_erm.json /tmp/BENCH_erm.json
   python benchmarks/bench_diff.py base.json new.json --threshold 0.10 --gate
@@ -129,7 +131,8 @@ def main(argv=None) -> int:
         print(f"{name},{m},{bv:.6f},{nv:.6f},{ratio:.3f},{flag}")
     for name in sorted(new_cells.keys() - base_cells.keys()):
         print(f"# added cell: {name}")
-    for name in sorted(base_cells.keys() - new_cells.keys()):
+    removed = sorted(base_cells.keys() - new_cells.keys())
+    for name in removed:
         print(f"# removed cell: {name}")
     compared = len(rows)
     if compared == 0:
@@ -143,6 +146,14 @@ def main(argv=None) -> int:
     for name, m, bv, nv, ratio, _ in regressions:
         print(f"# REGRESSION {name}.{m}: {bv:.6f}s -> {nv:.6f}s "
               f"({ratio:.2f}x)")
+    if a.gate and removed:
+        # a baseline cell with no name-matched counterpart is a silently
+        # shrunk matrix — under --gate that is a failure, not a footnote
+        # (a cell that regressed badly enough to be dropped would
+        # otherwise pass the timing gate by vanishing from it)
+        print(f"# GATE: {len(removed)} baseline cell(s) missing from the "
+              f"candidate: {', '.join(removed)}", file=sys.stderr)
+        return 1
     if regressions and a.gate:
         return 1
     return 0

@@ -1,0 +1,23 @@
+"""Static analysis: prove the lowered program matches its access contract.
+
+Two layers, both execution-free:
+
+- :mod:`repro.analysis.audit` lowers every backend's epoch functions from a
+  plan's abstract shapes (no data touched, nothing runs) and checks the
+  access contract against the optimized HLO: collective inventory vs the
+  declared reduction mode, buffer donation, dtype discipline, host
+  callbacks, epoch-stable jit cache keys, and H2D byte reconciliation with
+  the planner's ``AccessStats`` model.
+- :mod:`repro.analysis.lint` is an AST pass over ``src/repro`` with
+  repo-specific hazard rules (timing inside jitted code, unaccounted
+  ``device_put``, numpy on traced values, bare ``except`` around checkpoint
+  commits).
+
+``benchmarks/audit_gate.py`` runs both as the CI ``static-analysis`` job.
+"""
+from .audit import (AuditError, AuditReport, RuleResult, UnitAudit, RULES,
+                    audit)
+from .lint import LintFinding, lint_paths
+
+__all__ = ["AuditError", "AuditReport", "RuleResult", "UnitAudit", "RULES",
+           "audit", "LintFinding", "lint_paths"]

@@ -1,0 +1,285 @@
+"""AST hazard linter: repo-specific access-pattern rules over ``src/repro``.
+
+The auditor (:mod:`repro.analysis.audit`) proves what the LOWERED program
+does; this pass catches the hazards that never make it into a lowering —
+host work hiding inside traced code, staging that bypasses the accounting,
+and silenced checkpoint failures.  Rules:
+
+REPRO001  no ``time.*`` / ``datetime.*`` / ``random.*`` calls inside a
+          jitted or scanned function: host clocks inside traced code either
+          burn a tracer-time constant into the program or force a callback;
+          timing goes through ``repro.obs`` tracer spans.
+REPRO002  no raw ``jax.device_put`` outside the staging-accounting modules
+          (``data/pipeline.py``'s DeviceStager, ``distributed/sharding.py``):
+          every H2D byte must land in ``AccessStats`` — unaccounted puts are
+          exactly the hidden transfers the paper's access model exists to
+          count.  Accounted call sites elsewhere carry an inline allow.
+REPRO003  no ``np.*`` / ``numpy.*`` calls on traced values in kernel/solver
+          modules: numpy silently pulls a tracer to host (ConcretizationError
+          at best, a hidden device->host sync at worst).  Dtype/shape
+          constants (``np.float32`` etc.) are fine.
+REPRO004  no bare ``except:`` in checkpoint modules: a swallowed commit
+          failure turns a durable run into silent data loss.
+
+Allowlist policy: the dormant seed modules (``models/``, ``configs/``,
+``optim/``, ``train/``) are skipped wholesale — they are reference material
+the planner never imports, and flagging them would bury the live signal.
+Individual accounted sites use ``# lint: allow[RULE] reason`` on the line
+
+
+Run: ``python -m repro.analysis.lint [paths...]`` — exit 1 on findings.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence, Set
+
+RULES = ("REPRO001", "REPRO002", "REPRO003", "REPRO004")
+
+# dormant seed modules: reference material, never imported by the planner
+ALLOWLIST_DIRS = ("models/", "configs/", "optim/", "train/")
+
+# modules whose whole JOB is staging: device_put here IS the accounting
+DEVICE_PUT_MODULES = ("data/pipeline.py", "distributed/sharding.py")
+
+# kernel/solver modules where a numpy call on a traced value can hide
+KERNEL_MODULES = ("kernels/", "core/solvers.py", "core/step_rules.py",
+                  "core/erm.py", "core/samplers.py")
+
+# numpy attributes that are compile-time constants, not array ops
+_SAFE_NP = {
+    "float32", "float64", "float16", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "complex64",
+    "complex128", "dtype", "ndarray", "generic", "integer", "floating",
+    "pi", "e", "inf", "nan", "newaxis", "finfo", "iinfo", "issubdtype",
+}
+
+# callables whose function-valued arguments get traced
+_TRACING_CALLEES = re.compile(
+    r"(^|\.)(jit|pjit|scan|while_loop|fori_loop|cond|switch|vmap|pmap|"
+    r"grad|value_and_grad|checkpoint|remat|pallas_call|eval_shape|"
+    r"make_jaxpr)$")
+_JIT_DECORATOR = re.compile(r"(^|\.)(jit|pjit|pallas_call)\b")
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[(\w+)\]")
+
+
+@dataclasses.dataclass
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _callee_str(node: ast.AST) -> str:
+    """Dotted-name string of a call target ('' for computed callees)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    if isinstance(node, ast.Call):
+        # partial(jax.jit, ...)(f) / pallas_call(...)(x): look through
+        return _callee_str(node.func)
+    return ""
+
+
+def _decorator_is_traced(dec: ast.AST) -> bool:
+    """True for @jax.jit, @jit, @partial(jax.jit, ...), @pallas_call(...)."""
+    if isinstance(dec, ast.Call):
+        callee = _callee_str(dec.func)
+        if _JIT_DECORATOR.search(callee):
+            return True
+        if callee.split(".")[-1] == "partial":
+            return any(_JIT_DECORATOR.search(_name_of(a) or "")
+                       for a in dec.args)
+        return False
+    return bool(_JIT_DECORATOR.search(_name_of(dec) or ""))
+
+
+def _name_of(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return _callee_str(node)
+    return None
+
+
+class _TracedSetBuilder(ast.NodeVisitor):
+    """Collect every function node whose body runs under a jax trace:
+    jit-decorated defs, functions passed to scan/while_loop/..., lambdas
+    passed inline, and everything nested inside any of those."""
+
+    def __init__(self):
+        self.defs: dict = {}            # name -> [FunctionDef nodes]
+        self.roots: List[ast.AST] = []
+
+    def visit_FunctionDef(self, node):
+        self.defs.setdefault(node.name, []).append(node)
+        if any(_decorator_is_traced(d) for d in node.decorator_list):
+            self.roots.append(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node):
+        callee = _callee_str(node.func)
+        if callee and _TRACING_CALLEES.search(callee):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Lambda):
+                    self.roots.append(arg)
+                else:
+                    name = _name_of(arg)
+                    if name and name in self.defs:
+                        self.roots.extend(self.defs[name])
+                    elif (isinstance(arg, ast.Call)
+                          and _callee_str(arg.func).split(".")[-1]
+                          == "partial"):
+                        for a in arg.args:
+                            n = _name_of(a)
+                            if n and n in self.defs:
+                                self.roots.extend(self.defs[n])
+        self.generic_visit(node)
+
+
+def _traced_nodes(tree: ast.AST) -> Set[ast.AST]:
+    builder = _TracedSetBuilder()
+    # two passes so a function referenced before its def still resolves
+    builder.visit(tree)
+    builder.visit(tree)
+    traced: Set[ast.AST] = set()
+    for root in builder.roots:
+        for sub in ast.walk(root):
+            traced.add(sub)
+    return traced
+
+
+def _allowed(lines: Sequence[str], lineno: int, rule: str) -> bool:
+    # the allow may trail the flagged line or sit in the comment block
+    # above the (possibly multi-line) statement: look back a few lines
+    for ln in range(lineno, max(0, lineno - 5), -1):
+        if 1 <= ln <= len(lines):
+            m = _ALLOW_RE.search(lines[ln - 1])
+            if m and m.group(1) == rule:
+                return True
+    return False
+
+
+def _rel(path: Path, root: Optional[Path]) -> str:
+    if root is not None:
+        try:
+            return path.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            pass
+    return path.as_posix()
+
+
+def lint_file(path: Path, *, rel: Optional[str] = None,
+              use_allowlist: bool = True) -> List[LintFinding]:
+    rel = rel if rel is not None else path.as_posix()
+    if use_allowlist and any(f"/{d}" in f"/{rel}" for d in ALLOWLIST_DIRS):
+        return []
+    src = path.read_text()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [LintFinding(rel, e.lineno or 0, "REPRO000",
+                            f"unparseable: {e.msg}")]
+    lines = src.splitlines()
+    traced = _traced_nodes(tree)
+    findings: List[LintFinding] = []
+
+    def add(node, rule, msg):
+        if not (use_allowlist and _allowed(lines, node.lineno, rule)):
+            findings.append(LintFinding(rel, node.lineno, rule, msg))
+
+    in_kernel_module = any(k in rel for k in KERNEL_MODULES)
+    dp_allowed_module = any(rel.endswith(m) for m in DEVICE_PUT_MODULES)
+    checkpoint_module = "checkpoint" in rel
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            callee = _callee_str(node.func)
+            root_name = callee.split(".")[0] if callee else ""
+            # REPRO001: host clocks / stdlib rng inside traced code
+            if node in traced and root_name in ("time", "datetime",
+                                                "random"):
+                add(node, "REPRO001",
+                    f"{callee}() inside a jitted/scanned function — traced "
+                    f"code sees a constant, not a clock; use repro.obs "
+                    f"tracer spans")
+            # REPRO002: unaccounted staging
+            if callee in ("jax.device_put", "device_put") \
+                    and not dp_allowed_module:
+                add(node, "REPRO002",
+                    "raw jax.device_put outside DeviceStager — H2D bytes "
+                    "bypass AccessStats; stage through the pipeline or "
+                    "annotate the accounted site")
+            # REPRO003: numpy on traced values in kernel/solver modules
+            if (in_kernel_module and node in traced
+                    and root_name in ("np", "numpy")
+                    and callee.split(".")[-1] not in _SAFE_NP):
+                add(node, "REPRO003",
+                    f"{callee}() on a traced value — numpy forces the "
+                    f"tracer to host; use jnp")
+        elif isinstance(node, ast.ExceptHandler):
+            # REPRO004: swallowed checkpoint commit failures
+            if checkpoint_module and node.type is None:
+                add(node, "REPRO004",
+                    "bare except: around checkpoint code — a swallowed "
+                    "commit failure is silent data loss; name the "
+                    "exception and re-raise or log")
+    return findings
+
+
+def lint_paths(paths: Iterable, *, root: Optional[Path] = None,
+               use_allowlist: bool = True) -> List[LintFinding]:
+    """Lint every ``*.py`` under ``paths``; returns findings sorted by
+    (path, line).  ``root`` rebases reported paths (defaults to the common
+    ``src`` parent so findings read ``repro/...``)."""
+    findings: List[LintFinding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_file(f, rel=_rel(f, root),
+                                      use_allowlist=use_allowlist))
+    findings.sort(key=lambda f: (f.path, f.line))
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="repro hazard linter (REPRO001-004)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--no-allowlist", action="store_true",
+                    help="also lint dormant seed modules and ignore "
+                         "inline allows")
+    args = ap.parse_args(argv)
+    paths = args.paths or [Path(__file__).resolve().parents[2] / "repro"]
+    root = Path(paths[0]).resolve().parent if len(paths) == 1 else None
+    findings = lint_paths(paths, root=root,
+                          use_allowlist=not args.no_allowlist)
+    for f in findings:
+        print(f)
+    print(f"{len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

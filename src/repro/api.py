@@ -14,6 +14,7 @@ it with :func:`execute` (or one-shot :func:`run_experiment`):
 See :mod:`repro.core.experiment` for the planner rules and the
 backend-selection matrix.
 """
+from .analysis import AuditError, AuditReport, audit  # noqa: F401
 from .checkpoint.checkpointer import (  # noqa: F401
     Checkpointer, CheckpointPolicy)
 from .core.experiment import (  # noqa: F401
@@ -35,8 +36,8 @@ __all__ = [
     "CYCLIC", "RANDOM", "SCHEMES", "SYSTEMATIC",
     "CONSTANT", "LINE_SEARCH", "SOLVERS",
     "LS_MODES", "SEQUENTIAL", "VECTORIZED",
-    "Checkpointer", "CheckpointPolicy",
+    "AuditError", "AuditReport", "Checkpointer", "CheckpointPolicy",
     "DataSource", "ExecutionPlan", "ExperimentSpec", "PlanError",
     "RunResult", "Timeline", "TracePolicy", "Tracer",
-    "execute", "plan", "resume_from", "run_experiment",
+    "audit", "execute", "plan", "resume_from", "run_experiment",
 ]

@@ -102,6 +102,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     vT = v.transpose(0, 2, 1, 3)
 
     kern = functools.partial(
+        # lint: allow[REPRO003] d is a static shape dim, not a tracer
         _flash_kernel, scale=1.0 / np.sqrt(d), causal=causal, window=window,
         block_q=block_q, block_k=block_k, kv_blocks=nk)
 

@@ -69,6 +69,21 @@ def _elems(ts: str) -> int:
     return n
 
 
+def _split_top(args: str) -> List[str]:
+    """Split an operand list on top-level commas, respecting (), {}, []."""
+    parts, depth, start = [], 0, 0
+    for i, ch in enumerate(args):
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(args[start:i])
+            start = i + 1
+    parts.append(args[start:])
+    return parts
+
+
 @dataclasses.dataclass
 class Op:
     name: str
@@ -76,25 +91,41 @@ class Op:
     opcode: str
     rest: str           # operand list + attrs (raw tail of the line)
 
-    def operand_names(self) -> List[str]:
+    def _args_region(self) -> str:
         depth = 0
         for i, ch in enumerate(self.rest):
             if ch == "(":
                 depth += 1
             elif ch == ")":
                 if depth == 0:
-                    args = self.rest[:i]
-                    break
+                    return self.rest[:i]
                 depth -= 1
-        else:
-            args = self.rest
-        names = []
-        for tok in args.split(","):
+        return self.rest
+
+    def operands(self) -> List[Tuple[str, str]]:
+        """[(name, inline_type)] operand pairs.
+
+        Handles both the untyped dialect ("%a, %b") and the typed one newer
+        XLA emits ("f32[256,256]{1,0} %a, s32[] %b"); inline_type is "" when
+        the line carries no type and the caller should consult the types
+        table instead.
+        """
+        out = []
+        for tok in _split_top(self._args_region()):
             tok = tok.strip()
-            m = re.match(r"%?([\w\.\-]+)$", tok)
+            if not tok:
+                continue
+            m = re.match(r"^(?:(.+?)\s+)?%([\w\.\-]+)$", tok)
             if m:
-                names.append(m.group(1))
-        return names
+                out.append((m.group(2), m.group(1) or ""))
+                continue
+            m = re.match(r"^([\w\.\-]+)$", tok)
+            if m and "[" not in tok:
+                out.append((m.group(1), ""))
+        return out
+
+    def operand_names(self) -> List[str]:
+        return [n for n, _ in self.operands()]
 
 
 @dataclasses.dataclass
@@ -182,6 +213,11 @@ class HloCostModel:
     def _operand_type(self, comp: str, name: str) -> str:
         return self.types.get((comp, name), "")
 
+    def _operand_types(self, comp: str, op: Op) -> List[str]:
+        """Resolved operand types: inline (typed dialect) first, then the
+        per-computation types table (untyped dialect)."""
+        return [it or self._operand_type(comp, n) for n, it in op.operands()]
+
     def _fusion_kind(self, op: Op) -> str:
         """'elementwise' if all inner ops fuse; 'dus' if the only non-fusible
         inner ops are dynamic-update-slices; else 'boundary'."""
@@ -203,9 +239,8 @@ class HloCostModel:
             comp = m.group(1)
             for inner in self.comps.get(comp, []):
                 if inner.opcode == "dynamic-update-slice":
-                    names = inner.operand_names()
-                    upd = (_type_bytes(self._operand_type(comp, names[1]))
-                           if len(names) > 1 else 0)
+                    types = self._operand_types(comp, inner)
+                    upd = _type_bytes(types[1]) if len(types) > 1 else 0
                     total += 2.0 * upd
         return total
 
@@ -213,15 +248,29 @@ class HloCostModel:
         m = _TRIP_RE.search(op.rest)
         if m:
             return float(m.group(1))
-        # fallback: largest integer constant in the condition computation
-        best = 1.0
+        # Fallback when XLA drops known_trip_count: read the loop bound out
+        # of the condition computation. The epoch scan's condition is
+        # ``compare(gte(iv), constant(K)), direction=LT`` — prefer constants
+        # that actually feed a compare (the bound), not arbitrary literals
+        # the condition body may also hold.
+        best = 0.0
         if cond_name and cond_name in self.comps:
+            consts: Dict[str, float] = {}
             for o in self.comps[cond_name]:
                 if o.opcode == "constant":
                     cm = re.match(r"\s*(\d+)\s*\)", o.rest)
                     if cm:
-                        best = max(best, float(cm.group(1)))
-        return best
+                        consts[o.name] = float(cm.group(1))
+            compared: List[float] = []
+            for o in self.comps[cond_name]:
+                if o.opcode == "compare":
+                    for n in o.operand_names():
+                        if n in consts:
+                            compared.append(consts[n])
+            pool = compared if compared else list(consts.values())
+            if pool:
+                best = max(pool)
+        return best if best >= 1.0 else 1.0
 
     # ---- cost -------------------------------------------------------------
     def cost(self, comp: Optional[str] = None) -> Cost:
@@ -239,18 +288,27 @@ class HloCostModel:
         if oc in _NO_BYTES:
             return
         out_bytes = _type_bytes(op.result_type)
-        operand_bytes = sum(_type_bytes(self._operand_type(comp, n))
-                            for n in op.operand_names())
+        operand_bytes = sum(_type_bytes(t)
+                            for t in self._operand_types(comp, op))
 
         # collectives ---------------------------------------------------
-        base = oc[:-6] if oc.endswith("-start") else oc
+        base = oc
+        for suf in ("-start", "-done"):
+            if base.endswith(suf):
+                base = base[: -len(suf)]
         if base in COLLECTIVES:
             if oc.endswith("-done"):
-                return
+                return  # traffic was booked on the matching -start
             from .hlo_analysis import _group_size
             n = max(_group_size(op.rest, self.total_devices), 1)
             frac = (n - 1) / n
+            # async -start ops carry a (operand, result, ...) tuple type:
+            # the moved payload is the largest component, not their sum
             size = out_bytes
+            if op.result_type.lstrip().startswith("("):
+                size = max((_type_bytes(t) for t in
+                            _split_top(op.result_type.strip().strip("()"))),
+                           default=out_bytes)
             if base == "all-gather":
                 moved = size * frac
             elif base == "all-reduce":
@@ -319,8 +377,8 @@ class HloCostModel:
             out_elems = _elems_of(op.result_type)
             contracted = 1
             cm = _CONTRACT_RE.search(op.rest)
-            lhs_type = self._operand_type(comp, op.operand_names()[0]) \
-                if op.operand_names() else ""
+            op_types = self._operand_types(comp, op)
+            lhs_type = op_types[0] if op_types else ""
             if cm and lhs_type:
                 dims_m = _TYPE_RE.search(lhs_type)
                 if dims_m:
@@ -336,8 +394,8 @@ class HloCostModel:
 
         if oc == "convolution":
             # rough: 2 * out_elems * kernel_elems (kernel = operand 1)
-            k_type = (self._operand_type(comp, op.operand_names()[1])
-                      if len(op.operand_names()) > 1 else "")
+            op_types = self._operand_types(comp, op)
+            k_type = op_types[1] if len(op_types) > 1 else ""
             total.flops += 2.0 * _elems_of(op.result_type) * max(_elems_of(k_type), 1)
             total.bytes += out_bytes + operand_bytes
             return
@@ -347,8 +405,8 @@ class HloCostModel:
             total.bytes += 2.0 * out_bytes
             return
         if oc in ("dynamic-update-slice",):
-            upd = (_type_bytes(self._operand_type(comp, op.operand_names()[1]))
-                   if len(op.operand_names()) > 1 else out_bytes)
+            op_types = self._operand_types(comp, op)
+            upd = _type_bytes(op_types[1]) if len(op_types) > 1 else out_bytes
             total.bytes += 2.0 * upd
             return
 

@@ -1,0 +1,427 @@
+"""Static analysis subsystem: the plan auditor and the hazard linter.
+
+The auditor's contract (``repro.analysis.audit``): every backend cell is
+lowered from abstract shapes — NOTHING executes — and the optimized HLO
+is checked against the access contract.  Positive tests prove the live
+backends audit clean; negative tests deliberately break each rule and
+prove the auditor catches it (the CI gate's reason to exist).
+
+The linter's contract (``repro.analysis.lint``): repo-specific AST
+hazards (REPRO001-004) flag on minimal reproducers, stay silent on the
+safe variants, and honor both the inline ``# lint: allow[RULE]``
+escape and the dormant-seed module allowlist.  The live tree must lint
+clean — that assertion IS the repo-wide gate, run as a test.
+
+Sharded audits need 8 devices and run in ``tests.util.run_py``
+subprocesses (XLA device count is fixed at process start).
+"""
+import json
+import textwrap
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import AuditError, AuditReport, lint_paths
+from repro.analysis import audit as audit_fn
+from repro.analysis.lint import lint_file
+from repro.api import (GATHER, PSUM, CheckpointPolicy, DataSource,
+                       ExperimentSpec, PlanError, execute, plan,
+                       resume_from)
+from repro.data import dataset, sparse
+from tests.util import REPO, run_py
+
+import importlib
+A = importlib.import_module("repro.analysis.audit")
+# ^ the module — the package attribute `audit` is the re-exported FUNCTION,
+#   so plain `import repro.analysis.audit as A` would resolve to it
+
+ROWS, FEATS, B = 512, 16, 64
+
+
+@pytest.fixture(scope="module")
+def dense_corpus(tmp_path_factory):
+    path = tmp_path_factory.mktemp("analysis") / "dense.bin"
+    dataset.synth_erm_corpus(path, rows=ROWS, features=FEATS, seed=7)
+    return path
+
+
+@pytest.fixture(scope="module")
+def csr_corpus(tmp_path_factory):
+    path = tmp_path_factory.mktemp("analysis") / "csr.bin"
+    sparse.synth_sparse_classification(path, rows=ROWS, features=64,
+                                       density=0.05, seed=7)
+    return path
+
+
+def _spec(data, **kw):
+    kw.setdefault("solver", "mbsgd")
+    kw.setdefault("batch_size", B)
+    kw.setdefault("step_size", 0.05)
+    return ExperimentSpec(data=data, **kw)
+
+
+# ---------------------------------------------------------------- auditor ----
+
+def test_audit_accepts_spec_or_plan_only(dense_corpus):
+    with pytest.raises(TypeError, match="ExperimentSpec or ExecutionPlan"):
+        audit_fn("streamed-eager")
+
+
+@pytest.mark.parametrize("kw,backend", [
+    (dict(placement="streamed", solver="svrg", chunk=4), "streamed-eager"),
+    (dict(solver="sag"), "resident-eager"),
+    (dict(kernel="fused"), "resident-fused"),
+])
+def test_single_host_cells_audit_clean(dense_corpus, kw, backend):
+    report = audit_fn(plan(_spec(DataSource.corpus(dense_corpus), **kw)))
+    assert report.backend == backend
+    assert report.ok, report.describe()
+    # every rule produced a verdict for every lowered unit
+    for unit in report.units:
+        assert [r.rule for r in unit.results] == list(A.RULES)
+
+
+def test_sparse_cell_audits_clean_with_donation(csr_corpus):
+    report = audit_fn(plan(_spec(DataSource.corpus(csr_corpus),
+                                 solver="saga", chunk=4)))
+    assert report.backend == "sparse-csr" and report.ok, report.describe()
+    statuses = {r.rule: r.status for r in report.units[0].results}
+    assert statuses["donation"] == "pass"   # chunked engine donates state
+
+
+def test_resident_audit_skips_donation_with_reason(dense_corpus):
+    report = audit_fn(plan(_spec(DataSource.corpus(dense_corpus))))
+    (unit,) = report.units
+    don = {r.rule: r for r in unit.results}["donation"]
+    assert don.status == "skip" and "not declare donation" in don.evidence
+    assert report.ok   # skip is not a failure
+
+
+def test_audit_report_json_roundtrip(dense_corpus):
+    report = audit_fn(plan(_spec(DataSource.corpus(dense_corpus))))
+    d = json.loads(json.dumps(report.to_json()))
+    assert d["backend"] == report.backend and d["ok"] is True
+    assert {r["rule"] for u in d["units"] for r in u["results"]} \
+        == set(A.RULES)
+
+
+def test_plan_audit_kwarg_runs_the_check(dense_corpus, monkeypatch):
+    # plan(..., audit=True) must call the auditor and surface failures as
+    # PlanError (AuditError subclasses it) — break a rule to prove the
+    # wiring, not just the happy path
+    p = plan(_spec(DataSource.corpus(dense_corpus)), audit=True)  # clean
+    assert p.backend == "resident-eager"
+
+    def broken(plan_, an):
+        return A.RuleResult("dtypes", A.FAIL, "deliberately broken")
+    monkeypatch.setitem(A._RULE_FNS, "dtypes", broken)
+    with pytest.raises(PlanError, match="deliberately broken"):
+        plan(_spec(DataSource.corpus(dense_corpus)), audit=True)
+
+
+# ------------------------------------------- deliberate rule breakage --------
+# Acceptance: the gate FAILS when any rule is broken.  Each rule gets a
+# minimal broken artifact; the e2e test injects a genuinely hazardous
+# epoch function and audits the real pipeline end to end.
+
+def _fake_plan(**kw):
+    kw.setdefault("reduction", None)
+    kw.setdefault("shards", 1)
+    kw.setdefault("placement", "streamed")
+    return types.SimpleNamespace(**kw)
+
+
+def _fake_analyzed(compiled="", stablehlo="", stablehlo_2=None, unit=None,
+                   mem=None):
+    return types.SimpleNamespace(
+        compiled_text=compiled, stablehlo=stablehlo,
+        stablehlo_2=stablehlo if stablehlo_2 is None else stablehlo_2,
+        unit=unit, mem=mem or {})
+
+
+_AR_HLO = """
+ENTRY %main (p: f32[128]) -> f32[128] {
+  %p = f32[128]{0} parameter(0)
+  ROOT %ar = f32[128]{0} all-reduce(f32[128]{0} %p), replica_groups=[1,8]<=[8], to_apply=%add
+}
+"""
+
+
+def test_rule_collectives_fails_on_gather_with_traffic():
+    an = _fake_analyzed(compiled=_AR_HLO)
+    res = A._rule_collectives(_fake_plan(reduction=GATHER, shards=8), an)
+    assert res.status == A.FAIL and "all-reduce" in res.evidence
+
+
+def test_rule_collectives_fails_on_psum_without_traffic():
+    clean = """
+ENTRY %main (p: f32[128]) -> f32[128] {
+  ROOT %p = f32[128]{0} parameter(0)
+}
+"""
+    unit = types.SimpleNamespace(scan_trips=4)
+    res = A._rule_collectives(
+        _fake_plan(reduction=PSUM, shards=8, placement="resident"),
+        _fake_analyzed(compiled=clean, unit=unit))
+    assert res.status == A.FAIL and "ZERO collectives" in res.evidence
+
+
+def test_rule_collectives_fails_when_reduction_leaves_the_scan():
+    # streamed psum with 8 scanned batches but a single hoisted all-reduce
+    unit = types.SimpleNamespace(scan_trips=8)
+    res = A._rule_collectives(
+        _fake_plan(reduction=PSUM, shards=8, placement="streamed"),
+        _fake_analyzed(compiled=_AR_HLO, unit=unit))
+    assert res.status == A.FAIL and "left the scan" in res.evidence
+
+
+def test_rule_dtypes_fails_on_f64():
+    res = A._rule_dtypes(_fake_plan(), _fake_analyzed(
+        compiled="%x = f64[16]{0} convert(f32[16]{0} %p)"))
+    assert res.status == A.FAIL and "f64" in res.evidence
+
+
+def test_rule_callbacks_fails_on_host_callback():
+    res = A._rule_callbacks(_fake_plan(), _fake_analyzed(
+        stablehlo='stablehlo.custom_call @xla_python_cpu_callback(%0)'))
+    assert res.status == A.FAIL and "callback" in res.evidence
+
+
+def test_rule_cache_keys_fails_on_epoch_dependent_lowering():
+    res = A._rule_cache_keys(_fake_plan(), _fake_analyzed(
+        stablehlo="module @epoch1", stablehlo_2="module @epoch2"))
+    assert res.status == A.FAIL and "recompile" in res.evidence
+
+
+def test_rule_donation_fails_when_alias_dropped():
+    # donated unit, but the compiled module honors no aliases
+    unit = types.SimpleNamespace(donated=True, state_leaf_bytes=[64, 0])
+    an = _fake_analyzed(
+        compiled='HloModule jit_fn, entry_computation_layout={()->f32[]}',
+        unit=unit, mem={})
+    res = A._rule_donation(_fake_plan(), an)
+    assert res.status == A.FAIL and "not aliased" in res.evidence
+
+
+def test_audit_end_to_end_catches_injected_hazards(dense_corpus,
+                                                   monkeypatch):
+    """The acceptance negative: swap the real chunked epoch fn for one
+    that phones home via pure_callback and drops donation — the full
+    audit must fail on the real pipeline, naming the broken rules."""
+    def hazardous(state, Xc, yc, js):
+        t = jax.pure_callback(lambda: np.float32(0.0),
+                              jax.ShapeDtypeStruct((), jnp.float32))
+        w = state.w * (1.0 + t)
+        return state._replace(w=w + Xc.sum() * 0 + yc.sum() * 0
+                              + js.sum() * 0)
+
+    fake = jax.jit(hazardous)                      # no donate_argnums
+    monkeypatch.setattr(A, "make_epoch_fn", lambda problem, cfg: fake)
+    spec = _spec(DataSource.corpus(dense_corpus), placement="streamed",
+                 solver="svrg", chunk=4)
+    report = audit_fn(plan(spec))
+    assert not report.ok
+    broken = {r.rule for _, r in report.failures()}
+    assert "callbacks" in broken, report.describe()
+    assert "donation" in broken, report.describe()
+    with pytest.raises(AuditError, match="static audit failed"):
+        A.check(plan(spec))
+
+
+def test_audit_rejects_plan_wider_than_visible_devices(dense_corpus):
+    # a deserialized/resumed plan may claim more shards than this process
+    # can lower against — the audit must refuse loudly, not lower a lie
+    r = run_py("""
+        import dataclasses, jax
+        from repro.api import DataSource, ExperimentSpec, plan, audit, AuditError
+        mesh = jax.make_mesh((8,), ("data",))
+        spec = ExperimentSpec(data=DataSource.corpus({path!r}),
+                              batch_size=64, step_size=0.05, mesh=mesh)
+        wide = dataclasses.replace(plan(spec), shards=16)
+        try:
+            audit(wide)
+            print("NO-RAISE")
+        except AuditError as e:
+            print("RAISED ok" if "devices" in str(e) else "RAISED other")
+    """.format(path=str(dense_corpus)), devices=8)
+    assert r.returncode == 0, r.stderr
+    assert "RAISED ok" in r.stdout, r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_cells_audit_clean_in_subprocess(dense_corpus):
+    r = run_py("""
+        import jax
+        from repro.api import (DataSource, ExperimentSpec, GATHER, PSUM,
+                               RESIDENT, STREAMED, audit, plan)
+        mesh = jax.make_mesh((8,), ("data",))
+        for placement, reduction in ((STREAMED, GATHER), (STREAMED, PSUM),
+                                     (RESIDENT, GATHER), (RESIDENT, PSUM)):
+            spec = ExperimentSpec(data=DataSource.corpus({path!r}),
+                                  batch_size=64, step_size=0.05,
+                                  placement=placement, mesh=mesh,
+                                  reduction=reduction,
+                                  chunk=4 if placement == STREAMED else None)
+            rep = audit(plan(spec))
+            assert rep.ok, rep.describe()
+            print(placement, reduction, "ok")
+    """.format(path=str(dense_corpus)), devices=8)
+    assert r.returncode == 0, r.stderr + r.stdout
+    assert r.stdout.count("ok") == 4
+
+
+# ------------------------------------------------- audit on resume (sat 3) ---
+
+def test_resumed_plan_audits_identically(dense_corpus, tmp_path):
+    """Crash recovery must not change the access contract: the plan
+    ``resume_from`` rebuilds from the on-disk fingerprint audits with the
+    SAME per-rule verdicts as the plan that saved the checkpoint."""
+    ckdir = tmp_path / "ck"
+    p = plan(_spec(DataSource.corpus(dense_corpus), epochs=2,
+                   placement="streamed", chunk=4,
+                   checkpoint=CheckpointPolicy(ckdir, every=1)))
+    before = audit_fn(p)
+    assert before.ok, before.describe()
+    execute(p)
+
+    res = resume_from(ckdir)            # plan rebuilt from fingerprint
+    after = audit_fn(res.plan)
+    assert after.ok, after.describe()
+    strip = lambda rep: [(u.unit, [(r.rule, r.status) for r in u.results])
+                         for u in rep.units]
+    assert strip(before) == strip(after)
+    assert before.backend == after.backend
+
+
+# ------------------------------------------------------------------ linter ---
+
+def _lint_src(tmp_path, source, name="core/solvers_extra.py",
+              use_allowlist=True):
+    path = tmp_path / name
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return lint_file(path, rel=name, use_allowlist=use_allowlist)
+
+
+def test_lint_clock_inside_jit_flagged(tmp_path):
+    findings = _lint_src(tmp_path, """
+        import time, jax
+
+        @jax.jit
+        def step(w):
+            t = time.perf_counter()
+            return w * t
+    """)
+    assert [f.rule for f in findings] == ["REPRO001"]
+
+
+def test_lint_clock_in_scanned_body_flagged_even_defined_later(tmp_path):
+    # forward reference: scan names the body before its def
+    findings = _lint_src(tmp_path, """
+        import random
+        import jax
+
+        def epoch(w, xs):
+            return jax.lax.scan(body, w, xs)
+
+        def body(c, x):
+            return c + random.random(), None
+    """)
+    assert [f.rule for f in findings] == ["REPRO001"]
+
+
+def test_lint_clock_outside_trace_is_fine(tmp_path):
+    findings = _lint_src(tmp_path, """
+        import time
+
+        def wall_clock_epoch():
+            t0 = time.perf_counter()
+            return time.perf_counter() - t0
+    """)
+    assert findings == []
+
+
+def test_lint_raw_device_put_flagged_and_allow_comment_respected(tmp_path):
+    src = """
+        import jax
+
+        def stage(x):
+            return jax.device_put(x)
+    """
+    assert [f.rule for f in _lint_src(tmp_path, src)] == ["REPRO002"]
+    allowed = src.replace("jax.device_put(x)",
+                          "jax.device_put(x)  # lint: allow[REPRO002] ok")
+    assert _lint_src(tmp_path, allowed) == []
+    # --no-allowlist mode ignores the escape hatch
+    assert [f.rule for f in _lint_src(tmp_path, allowed,
+                                      use_allowlist=False)] == ["REPRO002"]
+
+
+def test_lint_device_put_fine_in_stager_modules(tmp_path):
+    src = """
+        import jax
+
+        def put(x):
+            return jax.device_put(x)
+    """
+    assert _lint_src(tmp_path, src, name="data/pipeline.py") == []
+    assert [f.rule for f in _lint_src(tmp_path, src,
+                                      name="obs/tracer.py")] \
+        == ["REPRO002"]
+
+
+def test_lint_numpy_on_traced_value_flagged_in_kernel_modules(tmp_path):
+    src = """
+        import numpy as np
+        import jax
+
+        @jax.jit
+        def step(w):
+            return np.sqrt(w)
+    """
+    assert [f.rule for f in _lint_src(tmp_path, src,
+                                      name="kernels/foo.py")] \
+        == ["REPRO003"]
+    # same hazard outside a kernel/solver module: other rules own it
+    assert _lint_src(tmp_path, src, name="obs/tracer.py") == []
+    # dtype constants are not array ops
+    ok = src.replace("np.sqrt(w)", "w.astype(np.float32)")
+    assert _lint_src(tmp_path, ok, name="kernels/foo.py") == []
+
+
+def test_lint_bare_except_in_checkpoint_modules(tmp_path):
+    src = """
+        def commit(tmp, final):
+            try:
+                tmp.rename(final)
+            except:
+                pass
+    """
+    assert [f.rule for f in _lint_src(
+        tmp_path, src, name="checkpoint/checkpointer_extra.py")] \
+        == ["REPRO004"]
+    assert _lint_src(tmp_path, src, name="core/driver.py") == []
+
+
+def test_lint_allowlisted_seed_dirs_skipped(tmp_path):
+    src = """
+        import time, jax
+
+        @jax.jit
+        def step(w):
+            return w * time.time()
+    """
+    assert _lint_src(tmp_path, src, name="models/transformer.py") == []
+    assert [f.rule for f in _lint_src(tmp_path, src,
+                                      name="models/transformer.py",
+                                      use_allowlist=False)] == ["REPRO001"]
+
+
+def test_live_tree_lints_clean():
+    """THE repo-wide gate, as a test: src/repro holds zero hazards (every
+    accounted device_put carries its inline allow)."""
+    findings = lint_paths([REPO / "src" / "repro"], root=REPO / "src")
+    assert findings == [], "\n".join(str(f) for f in findings)

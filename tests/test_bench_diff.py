@@ -92,6 +92,26 @@ def test_main_gate_flips_exit_on_regression(tmp_path, capsys):
     assert "REGRESSION a.epoch_s" in capsys.readouterr().out
 
 
+def test_main_gate_fails_on_missing_counterpart_cell(tmp_path, capsys):
+    """A baseline cell with no name-matched counterpart must flip --gate
+    to nonzero: dropping a cell is how a bad regression would otherwise
+    dodge the timing comparison entirely."""
+    base = _bench(tmp_path, "base.json", [_cell("a", 1.0), _cell("x", 1.0)])
+    new = _bench(tmp_path, "new.json", [_cell("a", 1.0)])
+    assert main([str(base), str(new)]) == 0          # report-only default
+    assert main([str(base), str(new), "--gate"]) == 1
+    err = capsys.readouterr().err
+    assert "missing from the candidate" in err and "x" in err
+
+
+def test_main_gate_added_cells_do_not_fail(tmp_path, capsys):
+    # growth of the matrix is fine under --gate; only shrink gates
+    base = _bench(tmp_path, "base.json", [_cell("a", 1.0)])
+    new = _bench(tmp_path, "new.json", [_cell("a", 1.0), _cell("y", 1.0)])
+    assert main([str(base), str(new), "--gate"]) == 0
+    assert "# added cell: y" in capsys.readouterr().out
+
+
 def test_main_reports_added_and_removed_cells(tmp_path, capsys):
     base = _bench(tmp_path, "base.json", [_cell("a", 1.0), _cell("x", 1.0)])
     new = _bench(tmp_path, "new.json", [_cell("a", 1.0), _cell("y", 1.0)])

@@ -83,6 +83,119 @@ ENTRY %main (p: f32[128]) -> f32[128] {
     assert abs(stats.by_kind["all-reduce"] - 896.0) < 1e-6
 
 
+def test_typed_operand_dialect_parsed():
+    # newer XLA emits operand types inline; the parser must recover both
+    # the names and the types without a computation-level types table
+    hlo = """
+ENTRY %main (p0: f32[4,8], p1: f32[8,16]) -> f32[4,16] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %p1 = f32[8,16]{1,0} parameter(1)
+  ROOT %d = f32[4,16]{1,0} dot(f32[4,8]{1,0} %p0, f32[8,16]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    model = HloCostModel(hlo, 1)
+    (op,) = [o for o in model.comps["main"] if o.opcode == "dot"]
+    assert op.operand_names() == ["p0", "p1"]
+    assert model._operand_types("main", op) == ["f32[4,8]{1,0}",
+                                                "f32[8,16]{1,0}"]
+    res = analyze(hlo, 1)
+    assert res["flops"] == 2 * 4 * 16 * 8, res
+
+
+def test_all_gather_reduce_scatter_permute_counted():
+    # the three collectives the old parser skipped, in the typed dialect
+    hlo = """
+ENTRY %main (p: f32[128]) -> f32[1024] {
+  %p = f32[128]{0} parameter(0)
+  %ag = f32[1024]{0} all-gather(f32[128]{0} %p), replica_groups=[1,8]<=[8], dimensions={0}
+  %rs = f32[128]{0} reduce-scatter(f32[1024]{0} %ag), replica_groups=[1,8]<=[8], dimensions={0}, to_apply=%add
+  ROOT %cp = f32[1024]{0} collective-permute(f32[1024]{0} %ag), source_target_pairs={{0,1},{1,2}}
+}
+"""
+    res = analyze(hlo, 8)
+    assert res["ici_counts"]["all-gather"] == 1
+    assert res["ici_counts"]["reduce-scatter"] == 1
+    assert res["ici_counts"]["collective-permute"] == 1
+    assert abs(res["ici_by_kind"]["all-gather"] - 4096 * 7 / 8) < 1e-6
+    assert abs(res["ici_by_kind"]["reduce-scatter"] - 512 * 7) < 1e-6
+    assert abs(res["ici_by_kind"]["collective-permute"] - 4096.0) < 1e-6
+
+
+def test_async_collective_start_done_counted_once():
+    # async pairs: traffic books on -start (largest tuple component), the
+    # matching -done must contribute neither a second count nor bytes
+    hlo = """
+ENTRY %main (p: f32[128]) -> f32[1024] {
+  %p = f32[128]{0} parameter(0)
+  %ags = (f32[128]{0}, f32[1024]{0}) all-gather-start(f32[128]{0} %p), replica_groups=[1,8]<=[8], dimensions={0}
+  ROOT %agd = f32[1024]{0} all-gather-done((f32[128]{0}, f32[1024]{0}) %ags)
+}
+"""
+    res = analyze(hlo, 8)
+    assert res["ici_counts"]["all-gather"] == 1
+    assert abs(res["ici_by_kind"]["all-gather"] - 4096 * 7 / 8) < 1e-6
+    # -done contributes no elementwise-estimate bytes either
+    assert res["bytes"] <= (128 + 1024 + 1024) * 4 + 4096, res["bytes"]
+
+
+def test_trip_count_condition_fallback_prefers_compare_bound():
+    # no known_trip_count backend_config: the bound must come from the
+    # constant feeding the condition's compare, not a larger unrelated
+    # literal the condition body also holds
+    hlo = """
+%body (arg.1: (f32[64,64], s32[])) -> (f32[64,64], s32[]) {
+  %arg.1 = (f32[64,64]{1,0}, s32[]) parameter(0)
+  %x = f32[64,64]{1,0} get-tuple-element((f32[64,64]{1,0}, s32[]) %arg.1), index=0
+  %d = f32[64,64]{1,0} dot(f32[64,64]{1,0} %x, f32[64,64]{1,0} %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %iv = s32[] get-tuple-element((f32[64,64]{1,0}, s32[]) %arg.1), index=1
+  %one = s32[] constant(1)
+  %next = s32[] add(s32[] %iv, s32[] %one)
+  ROOT %t = (f32[64,64]{1,0}, s32[]) tuple(f32[64,64]{1,0} %d, s32[] %next)
+}
+
+%cond (arg.2: (f32[64,64], s32[])) -> pred[] {
+  %arg.2 = (f32[64,64]{1,0}, s32[]) parameter(0)
+  %iv.2 = s32[] get-tuple-element((f32[64,64]{1,0}, s32[]) %arg.2), index=1
+  %junk = s32[] constant(1000)
+  %k = s32[] constant(8)
+  ROOT %lt = pred[] compare(s32[] %iv.2, s32[] %k), direction=LT
+}
+
+ENTRY %main (p: f32[64,64]) -> (f32[64,64], s32[]) {
+  %p = f32[64,64]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (f32[64,64]{1,0}, s32[]) tuple(f32[64,64]{1,0} %p, s32[] %z)
+  ROOT %w = (f32[64,64]{1,0}, s32[]) while((f32[64,64]{1,0}, s32[]) %init), condition=%cond, body=%body
+}
+"""
+    res = analyze(hlo, 1)
+    expect = 8 * 2 * 64 ** 3   # 8 trips, NOT 1000
+    assert 0.9 * expect < res["flops"] < 1.2 * expect, res["flops"]
+
+
+def test_epoch_fn_scan_body_multiplied():
+    # the real chunked epoch fn: its lowered module must show the in-graph
+    # batch loop multiplied through (K=8 dots over the chunk scan)
+    from repro.core.erm import ERMProblem
+    from repro.core.solvers import SolverConfig, make_epoch_fn, init_state
+
+    K, b, n = 8, 32, 64
+    problem = ERMProblem(loss="logistic", reg=1e-3)
+    cfg = SolverConfig(solver="mbsgd", step_size=0.1)
+    fn = make_epoch_fn(problem, cfg)
+    state = jax.eval_shape(
+        lambda w: init_state("mbsgd", w, K),
+        jax.ShapeDtypeStruct((n,), jnp.float32))
+    Xc = jax.ShapeDtypeStruct((K, b, n), jnp.float32)
+    yc = jax.ShapeDtypeStruct((K, b), jnp.float32)
+    js = jax.ShapeDtypeStruct((K,), jnp.int32)
+    txt = fn.lower(state, Xc, yc, js).compile().as_text()
+    res = analyze(txt, 1)
+    # per batch: forward Xw (2bn) + gradient X^T r (2bn); scan multiplies by K
+    floor = 2 * 2 * K * b * n * 0.9
+    assert res["flops"] >= floor, (res["flops"], floor)
+
+
 def test_dus_counts_slice_bytes_only_when_donated():
     def fn(buf, upd):
         return jax.lax.dynamic_update_slice(buf, upd, (0, 0))
