@@ -22,6 +22,12 @@ two sharded cells join the matrix: ``sharded-streamed`` and
 ``sharded-resident`` over the full device mesh, asserting the per-device
 H2D accounting landed in the RunResult JSON.
 
+A final **super-cell** stage coalesces four plan-compatible streamed
+specs through the service front-end (``serve``): all four must ride one
+cells=4 super-cell, land bit-identically on their solo trajectories,
+attribute the shared stream at 1/4 per cell, and reconcile per-cell
+timelines — the coalescing contract smoked end-to-end per push.
+
   PYTHONPATH=src python benchmarks/api_smoke.py --out /tmp/api_smoke
 """
 from __future__ import annotations
@@ -35,7 +41,7 @@ import jax
 from repro.api import (FUSED, RESIDENT, RESIDENT_FUSED, SHARDED_RESIDENT,
                        SHARDED_STREAMED, SPARSE_CSR, STREAMED,
                        STREAMED_EAGER, DataSource, ExperimentSpec, Timeline,
-                       TracePolicy, execute, plan)
+                       TracePolicy, execute, plan, serve)
 from repro.data import dataset, sparse
 
 
@@ -109,6 +115,38 @@ def main(out_dir: Path) -> None:
               f"epoch_s={res.breakdown()['epoch_s']:.4f} "
               f"trace={trace_path.name} "
               f"({len(res.timeline.events)} spans) -> {path}")
+    supercell_smoke(out_dir)
+
+
+def supercell_smoke(out_dir: Path) -> None:
+    """Four plan-compatible streamed specs through ``serve``: one cells=4
+    super-cell, bit-identical to solo, per-cell timelines reconciling."""
+    import numpy as np
+
+    dense = out_dir / "smoke_dense.bin"
+    specs = [ExperimentSpec(data=DataSource.corpus(dense), solver="saga",
+                            scheme="systematic", step_size=s,
+                            placement=STREAMED, batch_size=128, epochs=2,
+                            trace=TracePolicy(
+                                path=out_dir / f"trace_supercell_{i}.json"))
+             for i, s in enumerate((0.02, 0.05, 0.08, 0.1))]
+    outs = serve(specs)
+    assert [o.cells for o in outs] == [4, 4, 4, 4], [o.cells for o in outs]
+    assert all(o.ok for o in outs), [o.error for o in outs]
+    solo_access = None
+    for o in outs:
+        res = o.result
+        solo = execute(plan(o.spec))
+        np.testing.assert_array_equal(solo.w, res.w)        # bit parity
+        if solo_access is None:
+            solo_access = solo.stats.access_s
+        report = res.verify_timeline()                      # per-cell spans
+        assert report, f"cell {o.index}: verify_timeline ran no checks"
+        access = [e for e in res.timeline.events if e.lane == "access"]
+        assert access and all(e.args.get("cells") == 4 for e in access)
+        path = res.save_json(out_dir / f"run_supercell_{o.index}.json")
+        print(f"supercell[{o.index}]: objective={res.objective:.6f} "
+              f"cells={o.cells} access_s={res.stats.access_s:.4f} -> {path}")
 
 
 if __name__ == "__main__":

@@ -53,6 +53,8 @@ from repro.data import dataset, sparse
 
 DEFAULT_JSON = Path(__file__).resolve().parent / "BENCH_erm.json"
 DEFAULT_SPARSE_JSON = Path(__file__).resolve().parent / "BENCH_sparse.json"
+DEFAULT_SUPERCELL_JSON = (Path(__file__).resolve().parent
+                          / "BENCH_supercell.json")
 
 
 def _annotate_vs_rs(r, times, access):
@@ -276,6 +278,123 @@ def main_sparse(rows=100_000, features=65_536, batch=500, epochs=3,
     return out
 
 
+def main_supercell(rows=100_000, features=64, batch=500, epochs=3, cells=8,
+                   solver="saga", scheme="systematic",
+                   corpus_dir=Path("artifacts/bench"), chunk=None,
+                   json_out=None):
+    """Super-cell amortization bench: S plan-compatible cells (one solver,
+    S step sizes) ride ONE staged stream vs S sequential solo runs.
+
+    Emits the ``BENCH_supercell.json`` schema: the solo per-cell
+    access/H2D baseline; the S-cell amortized per-cell costs with the
+    headline ``access_h2d_amortization`` ratio (expected ~S: the shared
+    stream does the same read/convert/H2D work ONCE for S cells) and
+    ``trajectory_max_dw`` — the max |w_solo - w_supercell| across cells,
+    exactly 0.0 in the default bit-exact mode (the super-cell contract,
+    see tests/test_supercell.py); a ``vmap_lanes=True`` row, where the S
+    cells additionally share one vmapped engine call per chunk (fastest,
+    but its batched matvecs may drift from solo by ulps — its max_dw
+    column reports the measured drift); and the train-wall comparisons
+    (span-measured epoch time, compile excluded).
+    """
+    import numpy as np
+
+    from repro.api import execute_supercell
+
+    corpus_dir.mkdir(parents=True, exist_ok=True)
+    corpus = corpus_dir / f"erm_{rows}x{features}.bin"
+    if not corpus.exists():
+        dataset.synth_erm_corpus(corpus, rows=rows, features=features)
+    steps = [0.01 + 0.01 * i for i in range(cells)]
+    specs = [ExperimentSpec(
+        data=DataSource.corpus(corpus), loss="logistic", reg=1e-4,
+        solver=solver, scheme=scheme, step_mode=CONSTANT,
+        step_size=float(s), batch_size=batch, epochs=epochs, chunk=chunk,
+        placement=STREAMED, record_objective=False) for s in steps]
+    plans = [plan(s) for s in specs]
+    solos = [execute(p) for p in plans]
+    supers = execute_supercell(plans)
+    vmapped = execute_supercell(plans, vmap_lanes=True)
+
+    mean = lambda xs: sum(xs) / len(xs)                      # noqa: E731
+    ah = lambda b: b["access_s_per_epoch"] + b["h2d_s_per_epoch"]  # noqa: E731
+    solo_b = [r.breakdown() for r in solos]
+    sup_b = [r.breakdown() for r in supers]
+    vm_b = [r.breakdown() for r in vmapped]
+    solo_ah, sup_ah = mean([ah(b) for b in solo_b]), mean([ah(b) for b in sup_b])
+    vm_ah = mean([ah(b) for b in vm_b])
+
+    def _max_dw(refs, others):
+        return max(float(np.max(np.abs(s.w - c.w)))
+                   for s, c in zip(refs, others))
+
+    # train_s sums are span-measured epoch walls (compile/warmup excluded);
+    # the supercell's per-cell train_s is wall/S, so the sum IS its wall
+    solo_wall = sum(r.train_s for r in solos)
+    super_wall = sum(r.train_s for r in supers)
+    vm_wall = sum(r.train_s for r in vmapped)
+
+    def _row(tag, rs, bs, n_cells):
+        return {"name": f"supercell_{tag}_{solver}_{scheme}",
+                "solver": solver, "scheme": scheme, "cells": n_cells,
+                "backend": rs[0].plan.backend, "chunk": rs[0].plan.chunk,
+                "epochs": epochs,
+                "epoch_s": mean([b["epoch_s"] for b in bs]),
+                "access_s_per_epoch": mean([b["access_s_per_epoch"]
+                                            for b in bs]),
+                "h2d_s_per_epoch": mean([b["h2d_s_per_epoch"] for b in bs]),
+                "compute_s_per_epoch": mean([b["compute_s_per_epoch"]
+                                             for b in bs]),
+                "objective": mean([b["objective"] for b in bs])}
+
+    r_solo = _row("solo", solos, solo_b, 1)
+    r_sup = _row(f"s{cells}", supers, sup_b, cells)
+    r_sup["access_h2d_amortization"] = (solo_ah / sup_ah
+                                        if sup_ah > 0 else float("inf"))
+    r_sup["trajectory_max_dw"] = _max_dw(solos, supers)
+    r_vm = _row(f"s{cells}_vmapped", vmapped, vm_b, cells)
+    r_vm["access_h2d_amortization"] = (solo_ah / vm_ah
+                                       if vm_ah > 0 else float("inf"))
+    r_vm["trajectory_max_dw"] = _max_dw(solos, vmapped)
+    r_wall = {"name": f"supercell_wall_{solver}_{scheme}",
+              "solver": solver, "scheme": scheme, "cells": cells,
+              "epochs": epochs, "solo_train_wall_s": solo_wall,
+              "supercell_train_wall_s": super_wall,
+              "vmapped_train_wall_s": vm_wall,
+              "wall_speedup": (solo_wall / super_wall
+                               if super_wall > 0 else float("inf")),
+              "vmapped_wall_speedup": (solo_wall / vm_wall
+                                       if vm_wall > 0 else float("inf"))}
+    results = [r_solo, r_sup, r_vm, r_wall]
+    if json_out:
+        payload = {"meta": {"schema": 1, "supercell": True, "rows": rows,
+                            "features": features, "batch": batch,
+                            "epochs": epochs, "cells": cells,
+                            "solver": solver, "scheme": scheme,
+                            "backend": jax.default_backend(),
+                            "unit": "seconds per epoch"},
+                   "results": results}
+        Path(json_out).write_text(json.dumps(payload, indent=2) + "\n")
+    out = []
+    for r in (r_solo, r_sup, r_vm):
+        d = (f"objective={r['objective']:.10f};"
+             f"access_ms={r['access_s_per_epoch']*1e3:.3f};"
+             f"h2d_ms={r['h2d_s_per_epoch']*1e3:.3f};"
+             f"compute_ms={r['compute_s_per_epoch']*1e3:.3f}")
+        if "access_h2d_amortization" in r:
+            d += (f";access_h2d_amortization="
+                  f"{r['access_h2d_amortization']:.2f}"
+                  f";trajectory_max_dw={r['trajectory_max_dw']:.1e}")
+        out.append((r["name"], r["epoch_s"] * 1e6, d))
+    out.append((r_wall["name"], super_wall * 1e6,
+                f"solo_wall_s={solo_wall:.3f};"
+                f"supercell_wall_s={super_wall:.3f};"
+                f"vmapped_wall_s={vm_wall:.3f};"
+                f"wall_speedup={r_wall['wall_speedup']:.2f};"
+                f"vmapped_wall_speedup={r_wall['vmapped_wall_speedup']:.2f}"))
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=100_000)
@@ -291,6 +410,11 @@ if __name__ == "__main__":
     ap.add_argument("--sparse", action="store_true",
                     help="CSR corpus sweep: schemes x --densities, "
                          f"emitting the {DEFAULT_SPARSE_JSON.name} schema")
+    ap.add_argument("--cells", type=int, default=None, metavar="S",
+                    help="super-cell amortization bench: S step-size cells "
+                         "of one solver ride a single staged stream vs S "
+                         "sequential solo runs, emitting the "
+                         f"{DEFAULT_SUPERCELL_JSON.name} schema")
     ap.add_argument("--densities", type=str, default="0.0005,0.002",
                     help="comma-separated nnz densities (sparse mode)")
     ap.add_argument("--resident", action="store_true",
@@ -328,6 +452,12 @@ if __name__ == "__main__":
     a = ap.parse_args()
     if a.sparse and a.resident:
         ap.error("--resident stages a dense corpus; drop --sparse")
+    if a.cells is not None:
+        if a.cells < 2:
+            ap.error("--cells S needs S >= 2 (S=1 IS the solo baseline)")
+        if a.sparse or a.resident or a.devices > 1:
+            ap.error("--cells times the streamed dense super-cell; drop "
+                     "--sparse/--resident/--devices")
     if a.devices > 1:
         if a.sparse:
             ap.error("--devices shards dense chunks; sharded CSR staging "
@@ -340,7 +470,12 @@ if __name__ == "__main__":
         # benchmarking single-host rows labeled as a sharded request
         ap.error(f"--reduction {a.reduction} needs --devices N>1 "
                  f"(it picks how a mesh combines per-device work)")
-    if a.sparse:
+    if a.cells is not None:
+        rows_out = main_supercell(
+            a.rows, a.features or 64, a.batch, a.epochs, cells=a.cells,
+            solver=(a.solvers or "saga").split(",")[0], chunk=a.chunk,
+            json_out=a.json_out)
+    elif a.sparse:
         sel = tuple(s for s in (a.solvers or "mbsgd").split(",") if s)
         rows_out = main_sparse(
             a.rows, a.features or 65_536, a.batch, a.epochs,

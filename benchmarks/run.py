@@ -73,7 +73,8 @@ SECTIONS = []
 # ---------------------------------------------------------------------------
 
 def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
-              checkpoint_dir=None, trace_dir=None, log=print):
+              checkpoint_dir=None, trace_dir=None, coalesce=False,
+              max_cells=None, log=print):
     """Drive a grid of ``ExperimentSpec``s under a wall-clock budget.
 
     Cells advance ROUND-ROBIN, ``round_epochs`` at a time, resuming each
@@ -83,6 +84,16 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
     finished and stays resumable; with no budget the sweep runs every cell
     to its spec's epoch budget.  Returns ``[(spec, RunResult), ...]`` in
     grid order (cells that never got a turn carry ``None``).
+
+    ``coalesce=True`` routes each round through the super-cell backend:
+    plan-compatible cells (same corpus, scheme, batch size, chunk shape,
+    placement, remaining budget) ride ONE staged data stream via
+    :func:`repro.api.execute_supercell` — one read / convert / H2D feeding
+    S solver updates — while incompatible cells keep their solo turns.
+    Per-cell trajectories are bit-identical either way, so the two modes'
+    grid JSONs differ only in the timing columns (``wall_s`` /
+    ``access_s`` shrink ~S-fold for coalesced cells; diff them with
+    ``bench_diff.py --metrics wall_s,access_s``).
 
     ``checkpoint_dir`` makes the sweep CRASH-resumable, not just
     budget-resumable: each cell checkpoints to ``<dir>/cell_<i>`` (a
@@ -102,8 +113,11 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
     import dataclasses
     from pathlib import Path
 
-    from repro.api import CheckpointPolicy, TracePolicy, execute, plan, \
-        resume_from
+    from repro.api import (CheckpointPolicy, DEFAULT_MAX_CELLS, TracePolicy,
+                           execute, execute_supercell, plan, resume_from)
+    from repro.api import coalesce as coalesce_plans
+
+    max_cells = DEFAULT_MAX_CELLS if max_cells is None else max_cells
 
     if checkpoint_dir is not None:
         root = Path(checkpoint_dir)
@@ -116,7 +130,12 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
         grid = [dataclasses.replace(
                     s, trace=TracePolicy(path=troot / f"cell_{i:03d}.json"))
                 for i, s in enumerate(grid)]
-    cells = [{"spec": s, "plan": plan(s), "result": None} for s in grid]
+    # wall_s / access_s / h2d_s accumulate across THIS sweep's round-robin
+    # turns (execute's per-call timings), so a cell's row reports the real
+    # per-cell cost the sweep paid for it — amortized shares when coalesced
+    cells = [{"spec": s, "plan": plan(s), "result": None,
+              "wall_s": 0.0, "access_s": 0.0, "h2d_s": 0.0, "cells": 1}
+             for s in grid]
     for i, c in enumerate(cells):
         if c["spec"].checkpoint is None:
             continue
@@ -130,18 +149,49 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
     t0 = time.perf_counter()
     exhausted = False
     progressed = True
+
+    def _grant(c):
+        done = c["result"].epochs_done if c["result"] else 0
+        return min(round_epochs, c["spec"].epochs - done)
+
+    def _book(c, res, s_cells):
+        c["result"] = res
+        c["wall_s"] += res.train_s
+        c["access_s"] += res.stats.access_s
+        c["h2d_s"] += res.stats.h2d_s
+        c["cells"] = s_cells
+
     while progressed and not exhausted:
         progressed = False
+        if coalesce:
+            # one coalescing pass per round: compatible cells (epochs done
+            # is part of the key, so they stay in lockstep round to round)
+            # share one staged stream; the rest keep their solo turns
+            live = [c for c in cells if _grant(c) > 0]
+            done0s = [c["result"].epochs_done if c["result"] else 0
+                      for c in live]
+            for batch in coalesce_plans([c["plan"] for c in live],
+                                        max_cells=max_cells, done0s=done0s):
+                if budget_s is not None \
+                        and time.perf_counter() - t0 >= budget_s:
+                    exhausted = True
+                    break
+                group = [live[j] for j in batch.indices]
+                results = execute_supercell(
+                    batch.plans, resumes=[c["result"] for c in group],
+                    epochs=_grant(group[0]))
+                for c, res in zip(group, results):
+                    _book(c, res, batch.size)
+                progressed = True
+            continue
         for c in cells:
-            done = c["result"].epochs_done if c["result"] else 0
-            remaining = c["spec"].epochs - done
-            if remaining <= 0:
+            if _grant(c) <= 0:
                 continue
             if budget_s is not None and time.perf_counter() - t0 >= budget_s:
                 exhausted = True
                 break
-            c["result"] = execute(c["plan"], resume=c["result"],
-                                  epochs=min(round_epochs, remaining))
+            _book(c, execute(c["plan"], resume=c["result"],
+                             epochs=_grant(c)), 1)
             progressed = True
     if exhausted:
         log(f"# budget {budget_s:.0f}s exhausted after "
@@ -168,11 +218,14 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
                               if spec.step_mode == "line_search" else None,
                    "scheme": spec.scheme, "backend": res.plan.backend,
                    "epochs_done": res.epochs_done,
-                   "epochs_budget": spec.epochs, **b}
+                   "epochs_budget": spec.epochs,
+                   "wall_s": c["wall_s"], "access_s": c["access_s"],
+                   "h2d_s": c["h2d_s"], "cells": c["cells"], **b}
             log(f"{name},{b['epoch_s'] * 1e6:.2f},"
                 f"objective={res.objective:.10f};"
                 f"epochs={res.epochs_done}/{spec.epochs};"
-                f"backend={res.plan.backend}")
+                f"backend={res.plan.backend};"
+                f"wall_s={c['wall_s']:.3f};cells={c['cells']}")
         else:
             row = {"name": name, "solver": spec.solver,
                    "step_mode": spec.step_mode, "scheme": spec.scheme,
@@ -184,8 +237,10 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
         import json as jsonmod
         import jax
         from repro.checkpoint import atomic_write_text
-        payload = {"meta": {"schema": 1, "budget_s": budget_s,
+        payload = {"meta": {"schema": 2, "budget_s": budget_s,
                             "round_epochs": round_epochs,
+                            "coalesce": bool(coalesce),
+                            "max_cells": max_cells,
                             "checkpoint_dir": (str(checkpoint_dir)
                                                if checkpoint_dir else None),
                             "backend": jax.default_backend(),
@@ -197,21 +252,36 @@ def run_sweep(grid, *, budget_s=None, round_epochs=1, json_out=None,
     return [(c["spec"], c["result"]) for c in cells]
 
 
-def demo_sweep_grid(rows=8192, features=32, epochs=6):
+def demo_sweep_grid(rows=8192, features=32, epochs=6, placement="memory"):
     """The demo grid: constant vs (vectorized) line-search axis across
-    three solvers on in-memory synthetic data — the step-rule comparison
-    the paper's tables make, as a sweep."""
+    three solvers — the step-rule comparison the paper's tables make, as a
+    sweep.  ``placement="memory"`` (default) runs on in-memory synthetic
+    arrays; ``"streamed"`` builds/reuses the memmapped corpus under
+    ``artifacts/bench`` and streams it, which is the regime where
+    ``--coalesce`` pays: every grid cell shares one read + H2D stream
+    instead of re-reading the corpus six times."""
     import dataclasses
     import itertools
+    from pathlib import Path
 
-    import jax as _jax
     from repro.api import DataSource, ExperimentSpec
-    from repro.core import synth_classification
 
-    X, y, _ = synth_classification(_jax.random.PRNGKey(0), rows, features,
-                                   separation=2.0)
-    base = ExperimentSpec(data=DataSource.arrays(X, y), loss="logistic",
-                          reg=1e-3, batch_size=256, epochs=epochs)
+    if placement == "memory":
+        import jax as _jax
+        from repro.core import synth_classification
+        X, y, _ = synth_classification(_jax.random.PRNGKey(0), rows,
+                                       features, separation=2.0)
+        data, kw = DataSource.arrays(X, y), {}
+    else:
+        from repro.data import dataset
+        corpus_dir = Path("artifacts/bench")
+        corpus_dir.mkdir(parents=True, exist_ok=True)
+        corpus = corpus_dir / f"erm_{rows}x{features}.bin"
+        if not corpus.exists():
+            dataset.synth_erm_corpus(corpus, rows=rows, features=features)
+        data, kw = DataSource.corpus(corpus), {"placement": placement}
+    base = ExperimentSpec(data=data, loss="logistic", reg=1e-3,
+                          batch_size=256, epochs=epochs, **kw)
     return [dataclasses.replace(base, solver=solver, step_mode=step_mode,
                                 step_size=1.0 if step_mode == "line_search"
                                 else None)
@@ -237,12 +307,24 @@ def sweep_main(argv) -> None:
     ap.add_argument("--trace", type=str, default=None, metavar="DIR",
                     help="per-cell Chrome traces under this dir "
                          "(cell_<i>.json; latest round-robin segment)")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="batch plan-compatible cells into super-cells "
+                         "(one staged stream per batch; bit-identical "
+                         "trajectories, amortized access)")
+    ap.add_argument("--max-cells", type=int, default=None,
+                    help="super-cell width cap (default "
+                         "repro.api.DEFAULT_MAX_CELLS)")
+    ap.add_argument("--placement", default="memory",
+                    choices=("memory", "streamed", "resident"),
+                    help="demo-grid data placement; streamed is where "
+                         "--coalesce amortizes access across the grid")
     a = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    run_sweep(demo_sweep_grid(rows=a.rows, epochs=a.epochs),
+    run_sweep(demo_sweep_grid(rows=a.rows, epochs=a.epochs,
+                              placement=a.placement),
               budget_s=a.budget_s, round_epochs=a.round_epochs,
               json_out=a.json_out, checkpoint_dir=a.checkpoint_dir,
-              trace_dir=a.trace)
+              trace_dir=a.trace, coalesce=a.coalesce, max_cells=a.max_cells)
 
 
 def run_main(argv) -> None:

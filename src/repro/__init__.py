@@ -9,6 +9,9 @@ __version__ = "1.1.0"
 
 def __getattr__(name):
     if name == "api":
-        from . import api
-        return api
+        # importlib, NOT ``from . import api``: the from-import re-enters
+        # this __getattr__ through _handle_fromlist before the submodule
+        # attribute is bound, recursing forever
+        import importlib
+        return importlib.import_module(".api", __name__)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -26,7 +26,11 @@ from .core.experiment import (  # noqa: F401
 from .core.samplers import CYCLIC, RANDOM, SCHEMES, SYSTEMATIC  # noqa: F401
 from .core.solvers import CONSTANT, LINE_SEARCH, SOLVERS  # noqa: F401
 from .core.step_rules import LS_MODES, SEQUENTIAL, VECTORIZED  # noqa: F401
+from .core.supercell import (  # noqa: F401
+    DEFAULT_MAX_CELLS, CellBatch, coalesce, execute_supercell,
+    supercell_key)
 from .obs import Timeline, TracePolicy, Tracer  # noqa: F401
+from .service import ExperimentService, Outcome, serve  # noqa: F401
 
 __all__ = [
     "ARRAYS", "AUTO", "BACKENDS", "CSR", "DENSE", "EAGER", "FUSED",
@@ -36,8 +40,10 @@ __all__ = [
     "CYCLIC", "RANDOM", "SCHEMES", "SYSTEMATIC",
     "CONSTANT", "LINE_SEARCH", "SOLVERS",
     "LS_MODES", "SEQUENTIAL", "VECTORIZED",
-    "AuditError", "AuditReport", "Checkpointer", "CheckpointPolicy",
-    "DataSource", "ExecutionPlan", "ExperimentSpec", "PlanError",
+    "AuditError", "AuditReport", "CellBatch", "Checkpointer",
+    "CheckpointPolicy", "DEFAULT_MAX_CELLS", "DataSource", "ExecutionPlan",
+    "ExperimentService", "ExperimentSpec", "Outcome", "PlanError",
     "RunResult", "Timeline", "TracePolicy", "Tracer",
-    "audit", "execute", "plan", "resume_from", "run_experiment",
+    "audit", "coalesce", "execute", "execute_supercell", "plan",
+    "resume_from", "run_experiment", "serve", "supercell_key",
 ]

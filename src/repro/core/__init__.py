@@ -10,7 +10,8 @@ no longer exported here.
 from . import access_model, erm, samplers, solvers, step_rules  # noqa: F401
 from .erm import ERMProblem, synth_classification  # noqa: F401
 from .samplers import (CYCLIC, RANDOM, SCHEMES, SYSTEMATIC,  # noqa: F401
-                       SamplerState, epoch_indices, make_sampler, next_batch)
+                       BatchIndices, SamplerState, epoch_indices,
+                       make_sampler, next_batch, next_indices)
 from .solvers import (MBSGD, SAAG2, SAG, SAGA, SOLVERS, SVRG,  # noqa: F401
                       SolverConfig)
 from .step_rules import (BacktrackingLS, ConstantStep,  # noqa: F401

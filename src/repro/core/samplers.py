@@ -13,9 +13,11 @@ levels:
 
 1. :func:`epoch_indices` — a dense ``(m, b)`` int32 matrix of indices for one
    epoch, traceable under ``jax.jit`` (used by the ERM solvers).
-2. :class:`SamplerState` + :func:`next_batch` — a pure functional stepper used
-   by the host data pipeline (two integers of state; exactly reconstructable
-   from ``(seed, step)`` which is what makes checkpoint/elastic-restart cheap).
+2. :class:`SamplerState` + :func:`next_indices` — a pure functional stepper
+   used by the host data pipelines and the super-cell driver (two integers of
+   state; exactly reconstructable from ``(seed, step)`` which is what makes
+   checkpoint/elastic-restart cheap).  ``next_batch`` / ``next_block_start``
+   are thin views of the same stream.
 3. :func:`batch_slice_starts` — block starts only, for contiguous consumers
    (``lax.dynamic_slice`` / Pallas block DMA) where materialising per-row
    indices would defeat the point.
@@ -27,7 +29,7 @@ shapes static for XLA while preserving the access pattern).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -160,19 +162,41 @@ def _epoch_perm(state: SamplerState, size: int) -> np.ndarray:
     return perm
 
 
-def next_batch(state: SamplerState) -> Tuple[np.ndarray, SamplerState]:
-    """Return (indices (b,), new_state). Host-side numpy; per-epoch shuffles
-    are memoized so the amortized cost is O(b), not O(l), per batch."""
+class BatchIndices(NamedTuple):
+    """One batch's row selection, scheme-agnostic.
+
+    ``idx`` is always materialized (``(b,)`` int64 rows, wrap-around padded);
+    ``start`` is the contiguous block start when the scheme has block
+    structure (CS/SS) and ``None`` for scattered RS — consumers keep their
+    single-slice fast path by testing ``start`` instead of scheme names.
+    """
+    idx: np.ndarray
+    start: Optional[int]
+
+
+def next_indices(state: SamplerState) -> Tuple[BatchIndices, SamplerState]:
+    """THE batch-selection entry point: (BatchIndices, new_state).
+
+    All per-scheme special cases (the memoized epoch permutation for RS/SS,
+    the arithmetic block starts for CS, the per-step replacement draw) live
+    behind this one call, so multi-consumer drivers — the data pipelines and
+    the super-cell executor — share one index stream without re-implementing
+    scheme branching.  Host-side numpy; per-epoch shuffles are memoized so
+    the amortized cost is O(b), not O(l), per batch.
+    """
     j = state.batch_in_epoch
     b, l, m = state.batch_size, state.l, state.m
+    start: Optional[int] = None
     if state.scheme == CYCLIC:
-        idx = (np.arange(j * b, (j + 1) * b, dtype=np.int64)) % l
+        start = j * b
+        idx = np.arange(start, start + b, dtype=np.int64) % l
     elif state.scheme == SYSTEMATIC:
         start = int(_epoch_perm(state, m)[j]) * b
         idx = (start + np.arange(b, dtype=np.int64)) % l
     elif state.with_replacement:
         # fresh draw per batch, but deterministic in (seed, step)
-        rng = np.random.default_rng(np.random.SeedSequence([state.seed, state.step]))
+        rng = np.random.default_rng(
+            np.random.SeedSequence([state.seed, state.step]))
         idx = rng.integers(0, l, size=b)
     else:
         perm = _epoch_perm(state, l)
@@ -181,19 +205,23 @@ def next_batch(state: SamplerState) -> Tuple[np.ndarray, SamplerState]:
             idx = perm[lo:hi]
         else:  # wrap-around padding for the trailing batch
             idx = np.concatenate([perm[lo:], perm[: hi - l]])
-    return idx.astype(np.int64), dataclasses.replace(state, step=state.step + 1)
+    return (BatchIndices(idx.astype(np.int64), start),
+            dataclasses.replace(state, step=state.step + 1))
+
+
+def next_batch(state: SamplerState) -> Tuple[np.ndarray, SamplerState]:
+    """Return (indices (b,), new_state) — thin wrapper over
+    :func:`next_indices`, kept for callers that only want rows."""
+    bi, new_state = next_indices(state)
+    return bi.idx, new_state
 
 
 def next_block_start(state: SamplerState) -> Tuple[int, SamplerState]:
     """Contiguous-scheme fast path: return (row_start, new_state) only."""
-    if state.scheme == CYCLIC:
-        start = state.batch_in_epoch * state.batch_size
-    elif state.scheme == SYSTEMATIC:
-        starts = _epoch_perm(state, state.m)
-        start = int(starts[state.batch_in_epoch]) * state.batch_size
-    else:
+    bi, new_state = next_indices(state)
+    if bi.start is None:
         raise ValueError("random sampling has no block structure")
-    return start, dataclasses.replace(state, step=state.step + 1)
+    return bi.start, new_state
 
 
 def restore(scheme: str, seed: int, step: int, l: int, batch_size: int,

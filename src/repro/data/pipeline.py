@@ -232,9 +232,9 @@ class DataPipeline(PrefetchPipeline):
         # number booked into AccessStats, so trace and stats cannot drift
         with self.tracer.timespan("read", ACCESS,
                                   scheme=self.sampler.scheme) as sp:
-            if self.sampler.scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
-                start, self.sampler = samplers.next_block_start(self.sampler)
-                b = self.cfg.batch_size
+            bi, self.sampler = samplers.next_indices(self.sampler)
+            if bi.start is not None:     # contiguous block (CS/SS)
+                start, b = bi.start, self.cfg.batch_size
                 if start + b <= self.hi - self.lo:
                     # np.array, not asarray: a memmap slice is a lazy VIEW,
                     # and the timed region must actually fault the pages in
@@ -249,8 +249,7 @@ class DataPipeline(PrefetchPipeline):
                         np.asarray(self.mm[self.lo + start:self.hi]),
                         np.asarray(self.mm[self.lo:self.lo + b - first])])
             else:
-                idx, self.sampler = samplers.next_batch(self.sampler)
-                rows = np.asarray(self.mm[self.lo + idx])  # scattered gather
+                rows = np.asarray(self.mm[self.lo + bi.idx])  # scattered gather
             sp.set(bytes=rows.nbytes)
         self.stats.record(sp.dur, rows.nbytes)
         return rows

@@ -369,9 +369,10 @@ class SparsePipeline(PrefetchPipeline):
         with self.tracer.timespan("read", ACCESS,
                                   scheme=self.sampler.scheme) as sp:
             csr, b = self.csr, self.cfg.batch_size
-            if self.sampler.scheme in (samplers.CYCLIC, samplers.SYSTEMATIC):
-                start, self.sampler = samplers.next_block_start(self.sampler)
-                r0 = self.lo + start
+            bi, self.sampler = samplers.next_indices(self.sampler)
+            if bi.start is not None:     # contiguous block (CS/SS)
+                r0 = self.lo + bi.start
+                start = bi.start
                 if start + b <= self.hi - self.lo:
                     fc, fv, lens, offs, y, ptr = self._read_rows_contiguous(
                         r0, r0 + b)
@@ -392,8 +393,7 @@ class SparsePipeline(PrefetchPipeline):
                           + touched_ptr * csr.indptr.itemsize
                           + y.nbytes)
             else:   # RS: b scattered row-segment gathers
-                idx, self.sampler = samplers.next_batch(self.sampler)
-                rows = self.lo + idx
+                rows = self.lo + bi.idx
                 starts = np.asarray(csr.indptr[rows])   # fancy-index: copies
                 lens = np.asarray(csr.indptr[rows + 1]) - starts
                 nnz = int(lens.sum())

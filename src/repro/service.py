@@ -1,0 +1,231 @@
+"""repro.service — a coalescing experiment service front-end.
+
+The request-queue shape of :mod:`repro.train.serve_loop` (admit many
+clients' requests, batch compatible ones, stream per-request completions
+back) applied to experiments instead of decode slots: clients submit
+:class:`~repro.core.experiment.ExperimentSpec`s, the service lowers each
+through :func:`~repro.core.experiment.plan`, partitions the queue into
+plan-compatible super-cells with :func:`~repro.core.supercell.coalesce`,
+and runs each batch through
+:func:`~repro.core.supercell.execute_supercell` — one staged data stream
+feeding S cells, so each client pays ``access / S``.
+
+Containment contract: a bad spec NEVER takes the queue down.  ``plan``
+failures (:class:`~repro.core.experiment.PlanError`), incompatible data
+plans, and execution errors all degrade to per-request :class:`Outcome`
+errors — incompatible specs simply ride their own solo cell, and a
+super-cell that fails at runtime is retried cell by cell so one
+poisonous spec cannot sink its batchmates.
+
+Durability: give the service a ``checkpoint_root`` and every request
+without its own checkpoint policy gets a per-cell sub-directory
+(``cell_000``, ``cell_001``, ... in submission order).  A re-submitted
+queue resumes each cell from its sub-directory — partially-complete
+cells run only their remaining budget, finished cells return their saved
+result without re-running.
+
+    from repro.api import DataSource, ExperimentSpec, serve
+
+    specs = [ExperimentSpec(data=DataSource.corpus("corpus.bin"),
+                            solver=s, step_size=a, epochs=5)
+             for s in ("saga", "svrg") for a in (0.05, 0.1)]
+    for out in serve(specs, checkpoint_root="runs/service"):
+        print(out.index, out.cells, out.result.objective)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .checkpoint.checkpointer import CheckpointPolicy
+from .core.experiment import (
+    ExecutionPlan, ExperimentSpec, PlanError, RunResult, execute, plan,
+    resume_from)
+from .core.supercell import (
+    DEFAULT_MAX_CELLS, coalesce, execute_supercell)
+
+
+@dataclasses.dataclass
+class Submission:
+    """One admitted request: the spec plus who asked for it."""
+    index: int
+    spec: ExperimentSpec
+    client: str = "anon"
+
+
+@dataclasses.dataclass
+class Outcome:
+    """Per-request terminal state, streamed back in submission order.
+
+    Exactly one of ``result`` / ``error`` is set.  ``cells`` is the size
+    of the super-cell the request rode (1 = solo; 0 = never executed,
+    i.e. rejected at planning time or restored complete from a
+    checkpoint without running).  ``wall_s`` is the wall-clock the
+    request's batch took — shared by every cell in it.
+    """
+    index: int
+    client: str
+    spec: ExperimentSpec
+    result: Optional[RunResult] = None
+    error: Optional[str] = None
+    cells: int = 0
+    resumed: bool = False
+    wall_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+class ExperimentService:
+    """Admit specs from many clients, coalesce, execute, stream results.
+
+    ``submit`` only enqueues (cheap, never raises on a bad spec);
+    ``drain`` does all planning, coalescing, and execution and returns
+    one :class:`Outcome` per submission in order.
+    """
+
+    def __init__(self, *, max_cells: int = DEFAULT_MAX_CELLS,
+                 checkpoint_root=None, resume: bool = True):
+        if max_cells < 1:
+            raise ValueError(f"max_cells must be >= 1 (got {max_cells})")
+        self.max_cells = max_cells
+        self.checkpoint_root = (Path(checkpoint_root)
+                                if checkpoint_root is not None else None)
+        self.resume = resume
+        self._queue: List[Submission] = []
+        self._next = 0
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def submit(self, spec: ExperimentSpec, client: str = "anon") -> int:
+        """Enqueue a spec; returns its ticket (the submission index)."""
+        ticket = self._next
+        self._next += 1
+        self._queue.append(Submission(ticket, spec, client))
+        return ticket
+
+    # -- planning ----------------------------------------------------------
+
+    def _cell_dir(self, ticket: int) -> Optional[Path]:
+        if self.checkpoint_root is None:
+            return None
+        return self.checkpoint_root / f"cell_{ticket:03d}"
+
+    def _admit(self, sub: Submission):
+        """Lower one submission: (outcome, plan, resume_result).
+
+        A planning failure yields a terminal error outcome (plan=None);
+        a complete checkpoint yields a terminal result outcome without a
+        plan to run.
+        """
+        spec = sub.spec
+        cdir = self._cell_dir(sub.index)
+        if cdir is not None and spec.checkpoint is None:
+            spec = dataclasses.replace(
+                spec, checkpoint=CheckpointPolicy(directory=cdir))
+        out = Outcome(sub.index, sub.client, spec)
+        try:
+            plan_ = plan(spec)
+        except PlanError as e:
+            out.error = f"plan: {e}"
+            return out, None, None
+        try:
+            rr = self._probe_resume(plan_)
+        except Exception as e:           # mismatched / corrupt checkpoint
+            out.error = f"resume: {e}"   # is a per-request failure too
+            return out, None, None
+        if rr is not None:
+            out.resumed = True
+            if rr.epochs_done >= spec.epochs:
+                out.result = rr          # already complete: nothing to run
+                return out, None, None
+        return out, plan_, rr
+
+    def _probe_resume(self, plan_: ExecutionPlan) -> Optional[RunResult]:
+        pol = plan_.spec.checkpoint
+        if not self.resume or pol is None:
+            return None
+        if not (Path(pol.directory) / "LATEST").exists():
+            return None                  # no committed snapshot yet
+        return resume_from(pol.directory, plan_)
+
+    # -- execution ---------------------------------------------------------
+
+    def drain(self) -> List[Outcome]:
+        """Plan, coalesce, and execute everything queued; returns one
+        outcome per submission, in submission order."""
+        queue, self._queue = self._queue, []
+        outcomes: List[Outcome] = []
+        work: List[tuple] = []           # (outcome, plan, resume)
+        for sub in queue:
+            out, plan_, rr = self._admit(sub)
+            outcomes.append(out)
+            if plan_ is not None:
+                work.append((out, plan_, rr))
+
+        plans = [p for _, p, _ in work]
+        resumes = [r for _, _, r in work]
+        done0s = [0 if r is None else r.epochs_done for r in resumes]
+        for batch in coalesce(plans, max_cells=self.max_cells,
+                              done0s=done0s):
+            outs = [work[i][0] for i in batch.indices]
+            res = [resumes[i] for i in batch.indices]
+            left = [p.spec.epochs - done0s[i]
+                    for i, p in zip(batch.indices, batch.plans)]
+            self._run_batch(batch.plans, res, outs, min(left))
+        return outcomes
+
+    def _run_batch(self, plans: List[ExecutionPlan],
+                   resumes: List[Optional[RunResult]],
+                   outs: List[Outcome], epochs: int) -> None:
+        t0 = time.perf_counter()
+        try:
+            results = execute_supercell(plans, resumes=resumes,
+                                        epochs=epochs)
+        except Exception as e:
+            if len(plans) == 1:
+                outs[0].error = f"execute: {e}"
+                outs[0].wall_s = time.perf_counter() - t0
+                return
+            # one poisonous cell must not sink its batchmates: degrade
+            # the whole super-cell to solo runs and contain per cell
+            for p, r, o in zip(plans, resumes, outs):
+                self._run_solo(p, r, o, epochs)
+            return
+        wall = time.perf_counter() - t0
+        for o, rr in zip(outs, results):
+            o.result, o.cells, o.wall_s = rr, len(plans), wall
+
+    def _run_solo(self, plan_: ExecutionPlan, resume: Optional[RunResult],
+                  out: Outcome, epochs: int) -> None:
+        t0 = time.perf_counter()
+        try:
+            out.result = execute(plan_, resume=resume, epochs=epochs)
+            out.cells = 1
+        except Exception as e:           # containment boundary: the queue
+            out.error = f"execute: {e}"  # outlives any one request
+        out.wall_s = time.perf_counter() - t0
+
+
+def serve(specs: Sequence[ExperimentSpec], *,
+          max_cells: int = DEFAULT_MAX_CELLS,
+          checkpoint_root=None, resume: bool = True,
+          clients: Optional[Sequence[str]] = None) -> List[Outcome]:
+    """One-shot service call: submit every spec, drain, return outcomes.
+
+    Equivalent to building an :class:`ExperimentService`, submitting each
+    spec, and calling :meth:`~ExperimentService.drain` once.
+    """
+    svc = ExperimentService(max_cells=max_cells,
+                            checkpoint_root=checkpoint_root, resume=resume)
+    clients = list(clients) if clients is not None else ["anon"] * len(specs)
+    if len(clients) != len(specs):
+        raise ValueError("clients must align with specs")
+    for spec, client in zip(specs, clients):
+        svc.submit(spec, client=client)
+    return svc.drain()
