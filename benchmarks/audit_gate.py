@@ -67,6 +67,13 @@ def _cells(dense, csr, mesh):
         "supercell-streamed[s=4]": spec(DataSource.corpus(dense),
                                         solver="saga", placement=STREAMED,
                                         chunk=4),
+        # the importance-weighted adaptive engines (PR 10): the extra
+        # (k,) weight aval rides the chunk payload and the batch dim is a
+        # BOUND — padded buffers must still reconcile H2D bytes exactly
+        "adaptive-streamed[chunk_importance]": spec(
+            DataSource.corpus(dense), scheme="chunk_importance", chunk=4),
+        "adaptive-csr[stochastic_batch]": spec(
+            DataSource.corpus(csr), scheme="stochastic_batch", chunk=4),
     }
     if mesh is not None:
         cells.update({

@@ -16,7 +16,9 @@ The survivor's weights and cumulative objective trace must equal the
 reference BIT-FOR-BIT.  Modes:
 
   basic    streamed + resident placements under CS (cyclic) and SS
-           (systematic) sampling, single device;
+           (systematic) sampling, single device, plus the adaptive
+           schemes (chunk_importance / stochastic_batch, streamed —
+           learned sampler state must survive the kill bitwise);
   elastic  the victim runs a 'gather' sharded plan on an 8-device mesh;
            the survivor restores the checkpoint onto a 4-device mesh and
            must still land bitwise on the single-host trajectory;
@@ -242,6 +244,12 @@ def main(argv=None) -> None:
                    lambda pl=pl, sc=sc: case_basic(root, pl, sc))
                   for pl in ("streamed", "resident")
                   for sc in ("cyclic", "systematic")]
+        # the PR 10 adaptive schemes, streamed only (the planner forces
+        # it): resume must also replay the LEARNED sampler state — chunk
+        # importance scores / stochastic-batch cursor — bitwise
+        cases += [(f"fault_kill_resume_streamed_{sc}",
+                   lambda sc=sc: case_basic(root, "streamed", sc))
+                  for sc in ("chunk_importance", "stochastic_batch")]
     if a.mode in ("elastic", "all"):
         cases.append(("fault_elastic_8to4", lambda: case_elastic(root)))
     if a.mode in ("sweep", "all"):

@@ -217,7 +217,15 @@ def _streamed_units(plan_: ExecutionPlan) -> List[_Unit]:
     problem = spec.problem
     m, n, b = plan_.num_batches, plan_.features, spec.batch_size
     K = plan_.chunk
-    fn = make_epoch_fn(problem, cfg)
+    # adaptive Schemes run the weighted engine: a trailing (k,) float32
+    # weight vector joins the staged payload.  The batch dimension ``b`` of
+    # the staged avals is then a BOUND, not the exact row count — variable-
+    # size draws are zero-padded back to the static shape, so the lowered
+    # shapes (and the H2D bytes DeviceStager books for the padded buffers)
+    # still reconcile exactly against these avals
+    adaptive = plan_.scheme_obj.adaptive
+    fn = (make_epoch_fn(problem, cfg, weighted=True) if adaptive
+          else make_epoch_fn(problem, cfg))
     state = _state_avals(plan_)
     sharded = plan_.shards > 1
     mesh = spec.mesh if sharded else None
@@ -230,6 +238,9 @@ def _streamed_units(plan_: ExecutionPlan) -> List[_Unit]:
         else:
             shapes = [(k, b, n), (k, b), (k,)]
             dtypes = [jnp.float32, jnp.float32, jnp.int32]
+        if adaptive:
+            shapes.append((k,))
+            dtypes.append(jnp.float32)
         if sharded:
             batch_axes = ((None, "batch", None), (None, "batch"), (None,))
             if plan_.reduction == GATHER:
@@ -273,7 +284,7 @@ def _resident_unit(plan_: ExecutionPlan) -> List[_Unit]:
     mesh = spec.mesh if sharded else None
     psum = sharded and plan_.reduction == PSUM
     lrows = plan_.shards * (-(-rows // plan_.shards)) if psum else rows
-    epoch_fn = make_resident_epoch_fn(problem, cfg, spec.scheme,
+    epoch_fn = make_resident_epoch_fn(problem, cfg, plan_.scheme_name,
                                       spec.batch_size,
                                       rows=rows if psum else None)
     state = _state_avals(plan_)

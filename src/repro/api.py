@@ -24,6 +24,8 @@ from .core.experiment import (  # noqa: F401
     DataSource, ExecutionPlan, ExperimentSpec, PlanError, RunResult,
     execute, plan, resume_from, run_experiment)
 from .core.samplers import CYCLIC, RANDOM, SCHEMES, SYSTEMATIC  # noqa: F401
+from .core.schemes import (  # noqa: F401
+    ChunkImportance, Cyclic, Random, Scheme, StochasticBatch, Systematic)
 from .core.solvers import CONSTANT, LINE_SEARCH, SOLVERS  # noqa: F401
 from .core.step_rules import LS_MODES, SEQUENTIAL, VECTORIZED  # noqa: F401
 from .core.supercell import (  # noqa: F401
@@ -38,6 +40,8 @@ __all__ = [
     "RESIDENT_FUSED", "SHARDED_RESIDENT", "SHARDED_STREAMED", "SPARSE_CSR",
     "STREAMED", "STREAMED_EAGER",
     "CYCLIC", "RANDOM", "SCHEMES", "SYSTEMATIC",
+    "ChunkImportance", "Cyclic", "Random", "Scheme", "StochasticBatch",
+    "Systematic",
     "CONSTANT", "LINE_SEARCH", "SOLVERS",
     "LS_MODES", "SEQUENTIAL", "VECTORIZED",
     "AuditError", "AuditReport", "CellBatch", "Checkpointer",

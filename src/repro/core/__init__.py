@@ -7,11 +7,14 @@ run it with ``execute()``.  The solver entry points in
 :mod:`repro.core.solvers` are internal backends the planner selects and are
 no longer exported here.
 """
-from . import access_model, erm, samplers, solvers, step_rules  # noqa: F401
+from . import access_model, erm, samplers, schemes, solvers, \
+    step_rules  # noqa: F401
 from .erm import ERMProblem, synth_classification  # noqa: F401
 from .samplers import (CYCLIC, RANDOM, SCHEMES, SYSTEMATIC,  # noqa: F401
                        BatchIndices, SamplerState, epoch_indices,
                        make_sampler, next_batch, next_indices)
+from .schemes import (ChunkImportance, Cyclic, Random, Scheme,  # noqa: F401
+                      SchemeState, StochasticBatch, Systematic)
 from .solvers import (MBSGD, SAAG2, SAG, SAGA, SOLVERS, SVRG,  # noqa: F401
                       SolverConfig)
 from .step_rules import (BacktrackingLS, ConstantStep,  # noqa: F401

@@ -42,7 +42,7 @@ import dataclasses
 import json
 from functools import partial
 from pathlib import Path
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +54,7 @@ from ..checkpoint.checkpointer import (Checkpointer, CheckpointPolicy,
 from ..distributed.sharding import data_parallel_width, make_staging_put
 from ..obs import (ACCESS, COMPUTE, EPOCH, GATHER as GATHER_LANE, H2D,
                    NULL_TRACER, Timeline, TracePolicy, Tracer)
-from . import samplers
+from . import samplers, schemes
 from .erm import ERMProblem, LOGISTIC, SMOOTH_HINGE, SQUARE
 from .solvers import (CONSTANT, LINE_SEARCH, SOLVERS, SolverConfig,
                       SolverState, epoch_begin, init_state, make_epoch_fn,
@@ -148,7 +148,11 @@ class ExperimentSpec:
     reg: float = 1e-4
     # method
     solver: str = "mbsgd"
-    scheme: str = samplers.SYSTEMATIC
+    # a Scheme instance or a legacy string ("random"/"cyclic"/"systematic");
+    # strings resolve to the canonical objects via schemes.resolve, and the
+    # describe()/to_json/fingerprint surfaces all record the canonical
+    # scheme.name + params either way
+    scheme: Union[str, schemes.Scheme] = samplers.SYSTEMATIC
     step_mode: str = CONSTANT
     step_size: Optional[float] = None   # None → 1/L (constant) or 1.0 (LS)
     # line-search hyperparameters (step_mode="line_search")
@@ -235,6 +239,17 @@ class ExecutionPlan:
         return self.nnz / max(1, self.rows * self.features)
 
     @property
+    def scheme_obj(self) -> schemes.Scheme:
+        """The canonical Scheme object (spec strings resolved)."""
+        return schemes.resolve(self.spec.scheme)
+
+    @property
+    def scheme_name(self) -> str:
+        """Canonical scheme name — what describe()/to_json/the fingerprint
+        record, identical for a legacy string spec and the object form."""
+        return self.scheme_obj.name
+
+    @property
     def step_rule(self) -> str:
         """The resolved step rule, e.g. ``constant`` or
         ``line_search[vectorized]`` — the ``ls_mode`` axis the benchmark
@@ -251,7 +266,10 @@ class ExecutionPlan:
             + (f", nnz={self.nnz}, kmax={self.kmax}" if self.fmt == CSR
                else "") + ")",
             f"method    : {self.cfg.solver}/{self.step_rule} under "
-            f"{self.spec.scheme} sampling, step={self.cfg.step_size:.3g}",
+            f"{self.scheme_name}"
+            + (f"{self.scheme_obj.params()}" if self.scheme_obj.params()
+               else "")
+            + f" sampling, step={self.cfg.step_size:.3g}",
             f"epoch     : m={self.num_batches} batches of "
             f"{self.spec.batch_size}, {self.chunk} per device call, "
             f"{self.spec.epochs} epochs",
@@ -331,9 +349,15 @@ def plan(spec: ExperimentSpec, *, audit: bool = False) -> ExecutionPlan:
     # ---- enum validation (fail with the full menu, not a KeyError later)
     if spec.solver not in SOLVERS:
         raise PlanError(f"unknown solver {spec.solver!r}; want one of {SOLVERS}")
-    if spec.scheme not in samplers.SCHEMES:
-        raise PlanError(f"unknown scheme {spec.scheme!r}; want one of "
-                        f"{samplers.SCHEMES}")
+    # ONE validator owns the sampling rules (Scheme.validate raises
+    # ValueError); plan() re-raises as PlanError at its boundary, exactly
+    # like the validate_ls arrangement below — so plan() users and direct
+    # pipeline/bind users can never drift apart
+    try:
+        scheme_obj = schemes.resolve(spec.scheme)
+        scheme_obj.validate(batch_size=spec.batch_size)
+    except ValueError as e:
+        raise PlanError(str(e)) from e
     if spec.step_mode not in (CONSTANT, LINE_SEARCH):
         raise PlanError(f"unknown step_mode {spec.step_mode!r}; want "
                         f"{(CONSTANT, LINE_SEARCH)}")
@@ -387,6 +411,31 @@ def plan(spec: ExperimentSpec, *, audit: bool = False) -> ExecutionPlan:
             spec.trace.validate()
         except ValueError as e:
             raise PlanError(str(e)) from e
+
+    # ---- adaptive schemes: host-feedback sampling constrains the lowering
+    if scheme_obj.adaptive:
+        if spec.step_mode == LINE_SEARCH:
+            raise PlanError(
+                f"scheme {scheme_obj.name!r} emits importance-weighted "
+                "gradients, but line search probes the UNWEIGHTED (and, for "
+                "stochastic batch size, zero-padded) batch objective — the "
+                "VectorizedLS trial ladder's Armijo comparison would mix "
+                "the two normalizations; use step_mode='constant'")
+        if spec.placement == RESIDENT or spec.data.kind == ARRAYS:
+            raise PlanError(
+                f"scheme {scheme_obj.name!r} picks each batch on the host "
+                "(per-step draws + feedback), which a resident in-graph "
+                "epoch cannot replay; it needs a streamed corpus "
+                "(placement='streamed' over DataSource.corpus)")
+        if spec.kernel == FUSED:
+            raise PlanError(
+                f"scheme {scheme_obj.name!r} needs the streamed engine; "
+                "fused kernels sample from a device-resident corpus")
+        if spec.mesh is not None and data_parallel_width(spec.mesh) > 1:
+            raise PlanError(
+                f"scheme {scheme_obj.name!r} is single-host for now: the "
+                "sharded staging path does not carry the per-batch "
+                "slot/weight schedule (ROADMAP follow-on)")
 
     probe = _probe(spec.data)
     if spec.batch_size > probe.rows:
@@ -460,6 +509,12 @@ def plan(spec: ExperimentSpec, *, audit: bool = False) -> ExecutionPlan:
                 "mode is a ROADMAP follow-on)")
         placement = STREAMED
         why.append("CSR corpus → streamed sparse engine")
+    elif scheme_obj.adaptive:
+        placement = STREAMED
+        why.append(f"{scheme_obj.name} sampling picks batches on the host "
+                   "(per-step draws + feedback) → streamed placement; "
+                   "pipeline read-ahead is disabled so the scheme state is "
+                   "exact at every epoch boundary")
     elif spec.placement != AUTO:
         placement = spec.placement
         why.append(f"placement {placement!r} forced by spec")
@@ -764,7 +819,8 @@ class RunResult:
                      "step_mode": p.cfg.step_mode,
                      "ls_mode": (p.cfg.ls_mode
                                  if p.cfg.step_mode == LINE_SEARCH else None),
-                     "step_size": p.cfg.step_size, "scheme": p.spec.scheme,
+                     "step_size": p.cfg.step_size, "scheme": p.scheme_name,
+                     "scheme_params": p.scheme_obj.params(),
                      "batch_size": p.spec.batch_size, "rows": p.rows,
                      "features": p.features, "num_batches": p.num_batches,
                      "chunk": p.chunk, "corpus_bytes": p.corpus_bytes,
@@ -809,7 +865,7 @@ class RunResult:
         if not isinstance(d, dict):
             d = json.loads(Path(source).read_text())
         want = {"backend": plan_.backend, "solver": plan_.cfg.solver,
-                "scheme": plan_.spec.scheme, "rows": plan_.rows,
+                "scheme": plan_.scheme_name, "rows": plan_.rows,
                 "devices": plan_.shards}
         got = {"backend": d["backend"], "solver": d["plan"]["solver"],
                "scheme": d["plan"]["scheme"], "rows": d["plan"]["rows"],
@@ -849,7 +905,8 @@ class RunResult:
 # mesh width / reduction family (within the bit-identical gather ∪
 # single-host family), the chunk shape, and the epoch budget reshape HOW
 # the same trajectory executes, not WHAT it computes.
-_FP_STRICT = ("solver", "scheme", "loss", "reg", "seed", "batch_size",
+_FP_STRICT = ("solver", "scheme", "scheme_params", "loss", "reg", "seed",
+              "batch_size",
               "step_mode", "step_size", "ls_mode", "ls_shrink", "ls_c",
               "ls_max_iter", "record_objective", "data", "fmt", "rows",
               "features", "num_batches", "placement", "kernel")
@@ -861,7 +918,8 @@ def _plan_fingerprint(p: ExecutionPlan) -> Dict:
     validated by :func:`resume_from` before any array is loaded."""
     s = p.spec
     return {
-        "solver": p.cfg.solver, "scheme": s.scheme, "loss": s.loss,
+        "solver": p.cfg.solver, "scheme": p.scheme_name,
+        "scheme_params": p.scheme_obj.params(), "loss": s.loss,
         "reg": s.reg, "seed": s.seed, "batch_size": s.batch_size,
         "step_mode": p.cfg.step_mode, "step_size": p.cfg.step_size,
         "ls_mode": p.cfg.ls_mode, "ls_shrink": p.cfg.ls_shrink,
@@ -887,7 +945,11 @@ def _validate_fingerprint(saved: Dict, plan_: ExecutionPlan) -> None:
     """
     cur = _plan_fingerprint(plan_)
     bad = [f"{k}: checkpoint {saved.get(k)!r} != plan {cur[k]!r}"
-           for k in _FP_STRICT if saved.get(k) != cur[k]]
+           for k in _FP_STRICT if saved.get(k) != cur[k]
+           # checkpoints written before the Scheme protocol carry no
+           # scheme_params block; the scheme NAME (always present) still
+           # pins the schedule for those uniform-scheme runs
+           and not (k == "scheme_params" and k not in saved)]
     if PSUM in (saved.get("reduction"), cur["reduction"]):
         bad += [f"{k}: checkpoint {saved.get(k)!r} != plan {cur[k]!r} "
                 f"(reduction='psum' pins the mesh)"
@@ -916,6 +978,10 @@ def _plan_diff(a: ExecutionPlan, b: ExecutionPlan) -> List[str]:
     diffs = []
     for f in dataclasses.fields(ExperimentSpec):
         va, vb = getattr(a.spec, f.name), getattr(b.spec, f.name)
+        if f.name == "scheme":
+            # a legacy string and the Scheme object it resolves to are the
+            # same scheme — compare canonically
+            va, vb = schemes.resolve(va), schemes.resolve(vb)
         if va != vb:
             if f.name == "mesh":
                 va, vb = _fmt_mesh(va), _fmt_mesh(vb)
@@ -1178,7 +1244,7 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
     # gradients); 'gather' and single-host see an unpadded corpus and run
     # the original program — the bit-parity surface
     psum = sharded and plan_.reduction == PSUM
-    epoch_fn = make_resident_epoch_fn(problem, cfg, spec.scheme,
+    epoch_fn = make_resident_epoch_fn(problem, cfg, plan_.scheme_name,
                                       spec.batch_size,
                                       rows=plan_.rows if psum else None)
     if psum:
@@ -1251,7 +1317,7 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
             if spec.record_objective:
                 history.append(float(obj(state.w)))     # outside the timers
             rck.after_epoch(e, state,
-                            {"scheme": spec.scheme, "seed": spec.seed,
+                            {"scheme": plan_.scheme_name, "seed": spec.seed,
                              "epochs": done0 + e + 1},
                             prefix + history, stats)
     finally:
@@ -1262,7 +1328,7 @@ def _execute_resident(plan_: ExecutionPlan, resume: Optional[RunResult],
         plan=plan_, objective=objective,
         history=np.asarray(prefix + history),
         w=np.asarray(state.w), solver_state=state,
-        sampler_state={"scheme": spec.scheme, "seed": spec.seed,
+        sampler_state={"scheme": plan_.scheme_name, "seed": spec.seed,
                        "epochs": done0 + epochs},
         epochs_run=epochs, epochs_done=done0 + epochs, stats=stats,
         train_s=train_s, compute_s=compute_s)
@@ -1280,17 +1346,28 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
     b = spec.batch_size
     state, done0 = _resume_state(plan_, resume)
     start_step = done0 * m
-    epoch_fn = make_epoch_fn(problem, cfg)
+    scheme_obj = plan_.scheme_obj
+    adaptive = scheme_obj.adaptive
+    epoch_fn = (make_epoch_fn(problem, cfg, weighted=True) if adaptive
+                else make_epoch_fn(problem, cfg))
 
+    # adaptive schemes: read-ahead is disabled (prefetch=0) so the sampler
+    # state is exact at every epoch boundary — observe() feedback and the
+    # checkpointed sampler_meta() must see exactly the consumed draws; a
+    # resumed adaptive run restores the scheme's learning state (scores /
+    # cursor) from the checkpoint's own meta instead of the (seed, step)
+    # arithmetic the uniform schemes are rebuilt from
+    smeta = (resume.sampler_state if adaptive and resume is not None
+             else None)
     pcfg = pipemod.PipelineConfig(corpus=spec.data.path, batch_size=b,
                                   sampling=spec.scheme, seed=spec.seed,
-                                  prefetch=spec.prefetch)
+                                  prefetch=0 if adaptive else spec.prefetch)
     if plan_.fmt == CSR:
         from ..data import sparse
         csr = sparse.open_csr_corpus(spec.data.path)
         kmax = plan_.kmax if plan_.kmax else csr.kmax
         pipe = sparse.SparsePipeline(pcfg, start_step=start_step,
-                                     tracer=tracer)
+                                     tracer=tracer, sampler_meta=smeta)
 
         def alloc(k):
             return (np.empty((k, b, kmax), np.int32),
@@ -1311,11 +1388,16 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
 
         def eval_obj(w):
             return sparse.csr_objective(problem, csr, np.asarray(w))
+
+        def block_losses(w):
+            means, _ = sparse.csr_block_losses(problem, csr, np.asarray(w),
+                                               b)
+            return {"block_losses": means}
     else:
         from ..data import dataset
         mm, _ = dataset.open_corpus(spec.data.path)
         pipe = pipemod.DataPipeline(pcfg, start_step=start_step,
-                                    tracer=tracer)
+                                    tracer=tracer, sampler_meta=smeta)
 
         def alloc(k):
             return (np.empty((k, b, n), np.float32),
@@ -1346,6 +1428,24 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
             return (total / plan_.rows
                     + 0.5 * problem.reg * float(jnp.dot(w, w)))
 
+        def block_losses(w):
+            # per-BLOCK mean loss in one streamed pass (blocks = the b-row
+            # batch slots the contiguous schemes index); numpy margins, no
+            # per-block jit calls — the eval chunk does not align with the
+            # block grid, so rows are binned by global offset
+            from ..data.sparse import _loss_np
+            wh = np.asarray(w)
+            sums = np.zeros(m, np.float64)
+            cnt = np.zeros(m, np.int64)
+            lo = 0
+            for Xc, yc in _row_chunks():
+                per = _loss_np(problem.loss, Xc @ wh, yc)
+                blk = (lo + np.arange(Xc.shape[0])) // b
+                np.add.at(sums, blk, per)
+                np.add.at(cnt, blk, 1)
+                lo += Xc.shape[0]
+            return {"block_losses": sums / np.maximum(cnt, 1)}
+
     sharded = plan_.shards > 1
     eval_fn = eval_obj if spec.record_objective else None
     if sharded:
@@ -1369,7 +1469,10 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
         host_w = np.asarray
     else:
         batch_axes = gather = None
-        stage_zeros = lambda k: zeros(k) + (jnp.zeros((k,), jnp.int32),)
+        # weighted (adaptive) engines take a trailing (k,) weight vector
+        stage_zeros = lambda k: (zeros(k) + (jnp.zeros((k,), jnp.int32),)
+                                 + ((jnp.ones((k,), jnp.float32),)
+                                    if adaptive else ()))
         host_w = lambda w: w
     if eval_fn is not None:
         inner_eval = eval_fn
@@ -1403,12 +1506,17 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
     rck = _RunCheckpointer(plan_, done0, epochs, tracer)
 
     def on_epoch(e, st, hist):
-        # deterministic count of CONSUMED batches — the prefetch producer
-        # may have advanced the live sampler a few steps further
-        rck.after_epoch(e, st,
-                        {"scheme": spec.scheme, "seed": spec.seed,
-                         "step": start_step + m * (e + 1)},
-                        prefix + hist, pipe.stats)
+        if adaptive:
+            # the adaptive driver drains exactly m draws per epoch and
+            # applies observe() BEFORE this hook, so the scheme's own meta
+            # (scores / cursor included) is exact here
+            smeta_e = pipe.sampler_meta()
+        else:
+            # deterministic count of CONSUMED batches — the prefetch
+            # producer may have advanced the live sampler a few steps
+            smeta_e = {"scheme": plan_.scheme_name, "seed": spec.seed,
+                       "step": start_step + m * (e + 1)}
+        rck.after_epoch(e, st, smeta_e, prefix + hist, pipe.stats)
 
     try:
         state, history, compute_s, train_s = _drive_chunked(
@@ -1417,7 +1525,10 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
             snapshot_begin=snapshot_begin, eval_fn=eval_fn,
             mesh=spec.mesh if sharded else None, batch_axes=batch_axes,
             gather=bool(gather), on_epoch=on_epoch, tracer=tracer,
-            epoch0=done0, step_rule=plan_.step_rule)
+            epoch0=done0, step_rule=plan_.step_rule,
+            adaptive=adaptive,
+            feedback=(block_losses if adaptive
+                      and scheme_obj.wants_feedback else None))
         if cfg.step_mode == LINE_SEARCH:
             # the trial ladder runs fused inside the chunk jit (one ladder
             # per batch), so the driver books the invocation count
@@ -1430,8 +1541,9 @@ def _execute_streamed(plan_: ExecutionPlan, resume: Optional[RunResult],
         plan=plan_, objective=objective,
         history=np.asarray(prefix + history),
         w=np.asarray(state.w), solver_state=state,
-        sampler_state={"scheme": spec.scheme, "seed": spec.seed,
-                       "step": start_step + m * epochs},
+        sampler_state=(pipe.sampler_meta() if adaptive else
+                       {"scheme": plan_.scheme_name, "seed": spec.seed,
+                        "step": start_step + m * epochs}),
         epochs_run=epochs, epochs_done=done0 + epochs, stats=pipe.stats,
         train_s=train_s, compute_s=compute_s)
 
@@ -1443,7 +1555,8 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
                    batch_axes=None, gather: bool = False,
                    on_epoch: Optional[Callable] = None,
                    tracer: Tracer = NULL_TRACER, epoch0: int = 0,
-                   step_rule: Optional[str] = None,
+                   step_rule: Optional[str] = None, adaptive: bool = False,
+                   feedback: Optional[Callable] = None,
                    ) -> Tuple[SolverState, List[float], float, float]:
     """The shared streaming engine under the dense and sparse backends:
     group the pipeline's batch stream into <=K-batch chunks (never crossing
@@ -1457,8 +1570,20 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
     objective probe, run OUTSIDE the timers; ``on_epoch(e, state, history)``
     is the checkpoint hook, also untimed, called at every epoch boundary.
     Returns (state, history, compute_s, train_s).
+
+    With ``adaptive=True`` the pipeline yields ``(payload, j, weight)``
+    triples (the Scheme protocol's adaptive surface) and the driver switches
+    to :func:`_drive_chunked_adaptive` — epoch-scoped staging plus the
+    ``feedback`` -> ``pipe.observe`` loop.
     """
     from ..data import pipeline as pipemod
+
+    if adaptive:
+        return _drive_chunked_adaptive(
+            pipe, epoch_fn, state, m=m, K=K, epochs=epochs, alloc=alloc,
+            fill=fill, snapshot_begin=snapshot_begin, eval_fn=eval_fn,
+            feedback=feedback, on_epoch=on_epoch, tracer=tracer,
+            epoch0=epoch0, step_rule=step_rule)
 
     def host_chunks():
         it = iter(pipe)
@@ -1525,6 +1650,87 @@ def _drive_chunked(pipe, epoch_fn, state, *, m: int, K: int, epochs: int,
     return state, history, compute_s, train_s
 
 
+def _drive_chunked_adaptive(pipe, epoch_fn, state, *, m: int, K: int,
+                            epochs: int, alloc: Callable, fill: Callable,
+                            snapshot_begin: Optional[Callable],
+                            eval_fn: Optional[Callable],
+                            feedback: Optional[Callable],
+                            on_epoch: Optional[Callable] = None,
+                            tracer: Tracer = NULL_TRACER, epoch0: int = 0,
+                            step_rule: Optional[str] = None,
+                            ) -> Tuple[SolverState, List[float], float, float]:
+    """The adaptive-scheme variant of :func:`_drive_chunked`.
+
+    Differences from the uniform driver, all serving one invariant — the
+    scheme state must be EXACT at every epoch boundary:
+
+    * the pipeline yields ``(payload, j, weight)`` triples: the scheme
+      chooses the gradient-table slot ``j`` (it is NOT ``step % m``) and
+      emits the unbiasedness ``weight`` the weighted epoch engine consumes
+      as a trailing ``(k,)`` vector;
+    * the :class:`DeviceStager` is scoped to ONE epoch: its producer thread
+      may only run ahead within the epoch, so after the epoch's chunks
+      drain, the (prefetch=0) pipeline has consumed exactly ``m`` draws —
+      ``feedback(w)`` statistics then land via ``pipe.observe`` at a
+      deterministic point in the draw stream, and ``pipe.sampler_meta()``
+      is checkpoint-exact when ``on_epoch`` fires;
+    * ``feedback`` runs BEFORE ``on_epoch`` so the checkpoint carries the
+      post-observe learning state (scores/cursor) — resume replays epoch
+      ``e+1`` bit-identically.
+    """
+    from ..data import pipeline as pipemod
+
+    def epoch_chunks():
+        it = iter(pipe)
+        done = 0
+        while done < m:
+            k = min(K, m - done)
+            bufs = alloc(k)
+            js = np.empty((k,), np.int32)
+            ws = np.empty((k,), np.float32)
+            for i in range(k):
+                payload, j, w = next(it)
+                fill(bufs, i, payload)
+                js[i] = j
+                ws[i] = w
+            yield bufs + (js, ws)
+            done += k
+
+    history: List[float] = []
+    compute_s = 0.0
+    train_s = 0.0
+    try:
+        for e in range(epochs):
+            stager = pipemod.DeviceStager(epoch_chunks(), put=_put_blocking,
+                                          depth=2, stats=pipe.stats,
+                                          tracer=tracer)
+            with tracer.timespan("train_epoch", EPOCH,
+                                 epoch=epoch0 + e) as se:
+                if snapshot_begin is not None:
+                    state = snapshot_begin(state)
+                done = 0
+                for args in stager:
+                    with tracer.timespan("chunk", COMPUTE,
+                                         epoch=epoch0 + e, first_batch=done,
+                                         step_rule=step_rule) as sc:
+                        state = epoch_fn(state, *args)
+                        jax.block_until_ready(state.w)
+                        sc.set(batches=int(args[0].shape[0]))
+                    compute_s += sc.dur
+                    done += args[0].shape[0]
+            stager.close()   # producer joined: the sampler is quiescent
+            train_s += se.dur
+            if eval_fn is not None:
+                history.append(float(eval_fn(state.w)))   # untimed
+            if feedback is not None:
+                pipe.observe(feedback(state.w))           # untimed
+            if on_epoch is not None:
+                on_epoch(e, state, history)               # untimed
+    finally:
+        pipe.close()
+    return state, history, compute_s, train_s
+
+
 def _put_blocking(host):
     # lint: allow[REPRO002] this IS the DeviceStager put (single-host):
     # the stager books every byte it moves through AccessStats
@@ -1553,7 +1759,11 @@ def _plan_from_fingerprint(saved: Dict, directory: Path,
     spec = ExperimentSpec(
         data=DataSource.corpus(saved["data"]),
         loss=saved["loss"], reg=saved["reg"],
-        solver=saved["solver"], scheme=saved["scheme"],
+        solver=saved["solver"],
+        # rebuild the Scheme OBJECT: a bare name would silently drop the
+        # adaptive schemes' parameters (ema/floor/min_frac) on crash-resume
+        scheme=schemes.from_meta({"scheme": saved["scheme"],
+                                  "params": saved.get("scheme_params")}),
         step_mode=saved["step_mode"], step_size=saved["step_size"],
         ls_mode=saved["ls_mode"], ls_shrink=saved["ls_shrink"],
         ls_c=saved["ls_c"], ls_max_iter=saved["ls_max_iter"],

@@ -13,11 +13,12 @@ levels:
 
 1. :func:`epoch_indices` — a dense ``(m, b)`` int32 matrix of indices for one
    epoch, traceable under ``jax.jit`` (used by the ERM solvers).
-2. :class:`SamplerState` + :func:`next_indices` — a pure functional stepper
-   used by the host data pipelines and the super-cell driver (two integers of
-   state; exactly reconstructable from ``(seed, step)`` which is what makes
-   checkpoint/elastic-restart cheap).  ``next_batch`` / ``next_block_start``
-   are thin views of the same stream.
+2. The :class:`~repro.core.schemes.Scheme` protocol — the host-side stepper
+   used by the data pipelines and the super-cell driver.  The per-scheme
+   branching that used to live here moved behind
+   ``Scheme.next_batch(state)``; this module keeps the historical
+   :class:`SamplerState` / :func:`next_indices` surface as thin shims over
+   the protocol, bit-identical stream included.
 3. :func:`batch_slice_starts` — block starts only, for contiguous consumers
    (``lax.dynamic_slice`` / Pallas block DMA) where materialising per-row
    indices would defeat the point.
@@ -25,24 +26,27 @@ levels:
 The last batch is handled by padding ``l`` up to ``m*b`` with wrap-around
 indices (the paper allows the trailing batch to be smaller; wrap-around keeps
 shapes static for XLA while preserving the access pattern).
+
+.. deprecated::
+   :func:`restore` and :func:`restore_from_meta` are kept as shims; new code
+   should use :meth:`Scheme.restore` / :func:`repro.core.schemes.restore_state`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import schemes
+from .schemes import BatchIndices, num_batches  # re-exported (historical home)
+
 RANDOM = "random"
 CYCLIC = "cyclic"
 SYSTEMATIC = "systematic"
 SCHEMES = (RANDOM, CYCLIC, SYSTEMATIC)
-
-
-def num_batches(l: int, batch_size: int) -> int:
-    return -(-l // batch_size)
 
 
 # ---------------------------------------------------------------------------
@@ -91,7 +95,7 @@ def batch_slice_starts(scheme: str, key: jax.Array, l: int,
 
 
 # ---------------------------------------------------------------------------
-# 2. host-side functional stepper (data pipeline / checkpointing)
+# 2. host-side functional stepper — legacy shim over the Scheme protocol
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -102,13 +106,11 @@ class SamplerState:
     Any host can reconstruct any other host's schedule from ``(seed, step)``
     alone — the property the fault-tolerance layer relies on.
 
-    ``_memo`` caches the current epoch's O(l) shuffle so stepping is O(b)
-    amortized per batch, not O(l).  It is pure derived data (a function of
-    (seed, epoch) only), excluded from comparison, carried across
-    ``dataclasses.replace`` steps by reference, and never serialized — so
-    determinism and checkpoint/restore semantics are untouched.  Being
-    per-sampler, concurrent pipelines (multi-host emulation) never thrash
-    each other, and the memory dies with the sampler.
+    Kept as the historical string-keyed surface; the actual per-scheme
+    stepping lives behind :class:`repro.core.schemes.Scheme`.  ``_memo``
+    caches the current epoch's O(l) shuffle exactly as before (pure derived
+    data, excluded from comparison, carried across ``dataclasses.replace``
+    by reference, never serialized).
     """
     scheme: str
     seed: int
@@ -141,72 +143,25 @@ def make_sampler(scheme: str, seed: int, l: int, batch_size: int,
     return SamplerState(scheme, seed, 0, l, batch_size, with_replacement)
 
 
-def _epoch_perm(state: SamplerState, size: int) -> np.ndarray:
-    """This epoch's permutation of ``size`` (rows for RS, block starts for
-    SS) over the ``SeedSequence([seed, epoch])`` stream — unchanged from the
-    pre-memoization code, so checkpointed schedules replay identically.
-
-    Memoized on the sampler: recomputing an O(l) shuffle for EVERY batch
-    made "access time" in the benchmarks mostly sampler time (7x the actual
-    scattered read at l=100k).  Only the current epoch's permutation is
-    retained; read-only so every batch of the epoch can share it.
-    """
-    key = (state.epoch, size)
-    perm = state._memo.get(key)
-    if perm is None:
-        perm = np.random.default_rng(
-            np.random.SeedSequence([state.seed, state.epoch])).permutation(size)
-        perm.setflags(write=False)
-        state._memo.clear()          # previous epoch is never needed again
-        state._memo[key] = perm
-    return perm
-
-
-class BatchIndices(NamedTuple):
-    """One batch's row selection, scheme-agnostic.
-
-    ``idx`` is always materialized (``(b,)`` int64 rows, wrap-around padded);
-    ``start`` is the contiguous block start when the scheme has block
-    structure (CS/SS) and ``None`` for scattered RS — consumers keep their
-    single-slice fast path by testing ``start`` instead of scheme names.
-    """
-    idx: np.ndarray
-    start: Optional[int]
+# the memoized epoch permutation now lives in schemes.py; re-exported under
+# its historical private name because resume tests (and any downstream code
+# poking the memo) call it directly
+_epoch_perm = schemes._epoch_perm
 
 
 def next_indices(state: SamplerState) -> Tuple[BatchIndices, SamplerState]:
     """THE batch-selection entry point: (BatchIndices, new_state).
 
-    All per-scheme special cases (the memoized epoch permutation for RS/SS,
-    the arithmetic block starts for CS, the per-step replacement draw) live
-    behind this one call, so multi-consumer drivers — the data pipelines and
-    the super-cell executor — share one index stream without re-implementing
-    scheme branching.  Host-side numpy; per-epoch shuffles are memoized so
-    the amortized cost is O(b), not O(l), per batch.
+    Thin shim: resolves the canonical :class:`~repro.core.schemes.Scheme`
+    and delegates to ``next_batch`` on a state *view* that shares this
+    sampler's memo dict — the index stream (and the memoization behavior)
+    is bit-identical to the pre-protocol implementation.
     """
-    j = state.batch_in_epoch
-    b, l, m = state.batch_size, state.l, state.m
-    start: Optional[int] = None
-    if state.scheme == CYCLIC:
-        start = j * b
-        idx = np.arange(start, start + b, dtype=np.int64) % l
-    elif state.scheme == SYSTEMATIC:
-        start = int(_epoch_perm(state, m)[j]) * b
-        idx = (start + np.arange(b, dtype=np.int64)) % l
-    elif state.with_replacement:
-        # fresh draw per batch, but deterministic in (seed, step)
-        rng = np.random.default_rng(
-            np.random.SeedSequence([state.seed, state.step]))
-        idx = rng.integers(0, l, size=b)
-    else:
-        perm = _epoch_perm(state, l)
-        lo, hi = j * b, (j + 1) * b
-        if hi <= l:
-            idx = perm[lo:hi]
-        else:  # wrap-around padding for the trailing batch
-            idx = np.concatenate([perm[lo:], perm[: hi - l]])
-    return (BatchIndices(idx.astype(np.int64), start),
-            dataclasses.replace(state, step=state.step + 1))
+    obj = schemes.resolve(state.scheme, state.with_replacement)
+    view = schemes.SchemeState(obj, state.seed, state.step, state.l,
+                               state.batch_size, (), state._memo)
+    bi, _ = obj.next_batch(view)
+    return bi, dataclasses.replace(state, step=state.step + 1)
 
 
 def next_batch(state: SamplerState) -> Tuple[np.ndarray, SamplerState]:
@@ -226,21 +181,20 @@ def next_block_start(state: SamplerState) -> Tuple[int, SamplerState]:
 
 def restore(scheme: str, seed: int, step: int, l: int, batch_size: int,
             with_replacement: bool = False) -> SamplerState:
-    """Rebuild sampler state from checkpoint metadata (exact resume)."""
+    """Rebuild sampler state from checkpoint metadata (exact resume).
+
+    .. deprecated:: use :meth:`Scheme.restore` /
+       :func:`repro.core.schemes.restore_state`."""
     s = make_sampler(scheme, seed, l, batch_size, with_replacement)
     return dataclasses.replace(s, step=step)
 
 
 def restore_from_meta(state: dict, l: int, batch_size: int,
                       with_replacement: bool = False) -> SamplerState:
-    """Rebuild a :class:`SamplerState` from the ``sampler_state`` dict a
-    :class:`~repro.core.experiment.RunResult` (or an execute() checkpoint)
-    carries.  Streamed results store the global batch counter (``step``);
-    resident results store whole epochs (``epochs``) — the in-graph engine
-    only stops at epoch boundaries, so its step is ``epochs * m``."""
-    if "step" in state:
-        step = int(state["step"])
-    else:
-        step = int(state["epochs"]) * num_batches(l, batch_size)
-    return restore(state["scheme"], int(state["seed"]), step, l, batch_size,
+    """Rebuild a :class:`SamplerState` from a ``sampler_state`` dict.
+
+    .. deprecated:: use :func:`repro.core.schemes.restore_state`, which also
+       understands the adaptive schemes' metadata."""
+    st = schemes.restore_state(state, l, batch_size)
+    return restore(state["scheme"], st.seed, st.step, l, batch_size,
                    with_replacement)

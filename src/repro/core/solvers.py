@@ -170,16 +170,26 @@ def _solver_direction(problem: ERMProblem, cfg: SolverConfig,
 
 def batch_step(problem: ERMProblem, cfg: SolverConfig, state: SolverState,
                Xb: jax.Array, yb: jax.Array, j: jax.Array,
-               step0: Optional[jax.Array] = None) -> SolverState:
+               step0: Optional[jax.Array] = None,
+               weight: Optional[jax.Array] = None) -> SolverState:
     """Apply one solver update using batch ``j`` with data (Xb, yb).
 
     ``step0`` (optional traced scalar) overrides the config's static initial
     step — the per-cell lift the super-cell engines vmap over; ``None``
-    keeps the solo program byte-for-byte."""
+    keeps the solo program byte-for-byte.  ``weight`` (optional traced
+    scalar) rescales the batch-mean data gradient — the unbiasedness
+    correction the weighted schemes (``BatchIndices.weight``) emit: for
+    importance sampling it is ``1/(m p_j)``, for stochastic batch size
+    ``b / b_t`` (zero-padded rows contribute zero to ``X^T dloss``, so the
+    padded mean only needs re-normalizing).  ``None`` keeps the uniform
+    program byte-for-byte."""
     w = state.w
     gd = problem.batch_grad_data(w, Xb, yb)
     gd_snap = (problem.batch_grad_data(state.snapshot, Xb, yb)
                if _needs_snapshot(cfg.solver) else None)
+    if weight is not None:
+        gd = gd * weight
+        gd_snap = None if gd_snap is None else gd_snap * weight
     v, g, new_state = _solver_direction(problem, cfg, state, j, gd, gd_snap)
     alpha = _step_rule(cfg).pick(step_rules.dense_probe(problem, Xb, yb),
                                  w, v, g, step0=step0)
@@ -189,16 +199,20 @@ def batch_step(problem: ERMProblem, cfg: SolverConfig, state: SolverState,
 def sparse_batch_step(problem: ERMProblem, cfg: SolverConfig,
                       state: SolverState, cols: jax.Array, vals: jax.Array,
                       yb: jax.Array, j: jax.Array,
-                      step0: Optional[jax.Array] = None) -> SolverState:
+                      step0: Optional[jax.Array] = None,
+                      weight: Optional[jax.Array] = None) -> SolverState:
     """One solver update from a padded-ELL CSR batch — the corpus is never
     densified.  (cols, vals): (b, kmax) per ``repro.data.sparse.SparseBatch``;
     the update rules are shared with the dense path via
     :func:`_solver_direction`, and line search backtracks on the sparse
-    batch objective.  ``step0`` as in :func:`batch_step`."""
+    batch objective.  ``step0`` / ``weight`` as in :func:`batch_step`."""
     w = state.w
     gd = problem.ell_batch_grad_data(w, cols, vals, yb)
     gd_snap = (problem.ell_batch_grad_data(state.snapshot, cols, vals, yb)
                if _needs_snapshot(cfg.solver) else None)
+    if weight is not None:
+        gd = gd * weight
+        gd_snap = None if gd_snap is None else gd_snap * weight
     v, g, new_state = _solver_direction(problem, cfg, state, j, gd, gd_snap)
     alpha = _step_rule(cfg).pick(
         step_rules.ell_probe(problem, cols, vals, yb), w, v, g, step0=step0)
@@ -376,7 +390,8 @@ def make_step_fn(problem: ERMProblem, cfg: SolverConfig):
 
 
 @lru_cache(maxsize=32)   # bounded: step_size is data-dependent (1/L per corpus)
-def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig):
+def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig,
+                  weighted: bool = False):
     """Chunked epoch engine: jit'd (state, Xc, yc, js) -> state.
 
     ``Xc: (K, b, n)``, ``yc: (K, b)``, ``js: (K,)`` are K staged mini-batches
@@ -388,6 +403,11 @@ def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig):
     ``(state, colsc, valsc, yc, js)`` with ``colsc: (K, b, kmax) int32``,
     ``valsc: (K, b, kmax) float32`` — the corpus is never densified; compute
     per batch is O(b * kmax), not O(b * n).
+
+    With ``weighted=True`` (the adaptive Scheme path) the signature gains a
+    trailing per-batch weight vector ``ws: (K,) float32`` — the scheme's
+    unbiasedness correction, threaded into :func:`batch_step` as a traced
+    scalar; the unweighted program stays byte-for-byte untouched.
 
     ``state`` is donated: the caller must treat the passed-in state as
     consumed and rebind the return value.  Identical (problem, cfg) pairs
@@ -409,6 +429,22 @@ def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig):
     unroll = 1 if sequential_ls else 8
 
     if cfg.sparse:
+        if weighted:
+            @partial(jax.jit, donate_argnums=(0,))
+            def sparse_epoch_chunk_w(state: SolverState, colsc: jax.Array,
+                                     valsc: jax.Array, yc: jax.Array,
+                                     js: jax.Array,
+                                     ws: jax.Array) -> SolverState:
+                def body(st, inp):
+                    cols, vals, yb, j, w = inp
+                    return sparse_batch_step(problem, cfg, st, cols, vals,
+                                             yb, j, weight=w), None
+                out, _ = jax.lax.scan(body, state,
+                                      (colsc, valsc, yc, js, ws),
+                                      unroll=unroll)
+                return out
+            return sparse_epoch_chunk_w
+
         @partial(jax.jit, donate_argnums=(0,))
         def sparse_epoch_chunk(state: SolverState, colsc: jax.Array,
                                valsc: jax.Array, yc: jax.Array,
@@ -421,6 +457,19 @@ def make_epoch_fn(problem: ERMProblem, cfg: SolverConfig):
                                   unroll=unroll)
             return out
         return sparse_epoch_chunk
+
+    if weighted:
+        @partial(jax.jit, donate_argnums=(0,))
+        def epoch_chunk_w(state: SolverState, Xc: jax.Array, yc: jax.Array,
+                          js: jax.Array, ws: jax.Array) -> SolverState:
+            def body(st, inp):
+                Xb, yb, j, w = inp
+                return batch_step(problem, cfg, st, Xb, yb, j,
+                                  weight=w), None
+            out, _ = jax.lax.scan(body, state, (Xc, yc, js, ws),
+                                  unroll=unroll)
+            return out
+        return epoch_chunk_w
 
     @partial(jax.jit, donate_argnums=(0,))
     def epoch_chunk(state: SolverState, Xc: jax.Array, yc: jax.Array,

@@ -108,16 +108,21 @@ def supercell_key(plan_: ExecutionPlan, done0: int = 0) -> Optional[Tuple]:
         return None                      # sharded backends stage per-mesh
     if plan_.kernel == FUSED:
         return None                      # fused engines own their DMA
+    if plan_.scheme_obj.adaptive:
+        # adaptive schemes evolve their own draw stream from run feedback:
+        # two cells would diverge after the first observe(), so they can
+        # never share a staged stream
+        return None
     if s.data.kind == ARRAYS:
         # DataSource equality excludes array payloads; stream identity
         # needs the SAME arrays, so key on object identity like resume does
         data_id: Tuple = ("arrays", id(s.data.X), id(s.data.y))
     else:
         data_id = ("corpus", str(s.data.path))
-    return (data_id, plan_.fmt, plan_.backend, plan_.placement, s.scheme,
-            s.seed, s.batch_size, plan_.chunk, s.prefetch, plan_.rows,
-            plan_.features, plan_.num_batches, plan_.kmax, s.epochs,
-            int(done0))
+    return (data_id, plan_.fmt, plan_.backend, plan_.placement,
+            plan_.scheme_obj.canonical(), s.seed, s.batch_size, plan_.chunk,
+            s.prefetch, plan_.rows, plan_.features, plan_.num_batches,
+            plan_.kmax, s.epochs, int(done0))
 
 
 @dataclasses.dataclass
@@ -620,7 +625,7 @@ def _supercell_streamed(plans: List[ExecutionPlan],
                 for t, i in enumerate(lane.cells):
                     rcks[i].after_epoch(
                         e, lane.cell_state(t),
-                        {"scheme": spec.scheme, "seed": spec.seed,
+                        {"scheme": ref.scheme_name, "seed": spec.seed,
                          "step": start_step + m * (e + 1)},
                         prefixes[i] + histories[i], _cell_stats(pipe.stats,
                                                                 S))
@@ -648,7 +653,7 @@ def _supercell_streamed(plans: List[ExecutionPlan],
             plan=p, objective=objective,
             history=np.asarray(prefixes[i] + histories[i]),
             w=np.asarray(st.w), solver_state=st,
-            sampler_state={"scheme": spec.scheme, "seed": spec.seed,
+            sampler_state={"scheme": ref.scheme_name, "seed": spec.seed,
                            "step": start_step + m * epochs},
             epochs_run=epochs, epochs_done=done0 + epochs,
             stats=_cell_stats(pipe.stats, S),
@@ -709,12 +714,12 @@ def _supercell_resident(plans: List[ExecutionPlan],
     for lane in lanes:
         if lane.vmapped:
             lane.fn = make_supercell_resident_fn(
-                lane.problem, lane.cfg, spec.scheme, spec.batch_size)
+                lane.problem, lane.cfg, ref.scheme_name, spec.batch_size)
         else:
             # solo resident engines, per cell: snapshot refresh stays
             # in-graph exactly as the solo run compiles it
             lane.fns = [make_resident_epoch_fn(lane.problem, c,
-                                               spec.scheme, spec.batch_size)
+                                               ref.scheme_name, spec.batch_size)
                         for c in lane.cfgs]
         if fresh:
             if lane.vmapped:
@@ -802,7 +807,7 @@ def _supercell_resident(plans: List[ExecutionPlan],
                             lane.problem, lane.cell_w(t), X, y)))
                     rcks[i].after_epoch(
                         e, lane.cell_state(t),
-                        {"scheme": spec.scheme, "seed": spec.seed,
+                        {"scheme": ref.scheme_name, "seed": spec.seed,
                          "epochs": done0 + e + 1},
                         prefixes[i] + histories[i], _cell_stats(stats, S))
     finally:
@@ -822,7 +827,7 @@ def _supercell_resident(plans: List[ExecutionPlan],
                 plan=p, objective=objective,
                 history=np.asarray(prefixes[i] + histories[i]),
                 w=np.asarray(st.w), solver_state=st,
-                sampler_state={"scheme": spec.scheme, "seed": spec.seed,
+                sampler_state={"scheme": ref.scheme_name, "seed": spec.seed,
                                "epochs": done0 + epochs},
                 epochs_run=epochs, epochs_done=done0 + epochs,
                 stats=_cell_stats(stats, S),

@@ -26,11 +26,11 @@ import dataclasses
 import queue
 import threading
 from pathlib import Path
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional, Tuple, Union
 
 import numpy as np
 
-from ..core import samplers
+from ..core import samplers, schemes
 from ..obs import ACCESS, H2D, NULL_TRACER
 from .dataset import CorpusMeta, host_shard, open_corpus
 
@@ -38,8 +38,9 @@ from .dataset import CorpusMeta, host_shard, open_corpus
 @dataclasses.dataclass
 class PipelineConfig:
     corpus: Path
-    batch_size: int                  # rows per host batch
-    sampling: str = samplers.SYSTEMATIC
+    batch_size: int                  # rows per host batch (upper bound for
+    # variable-size schemes; staged buffers keep this static shape)
+    sampling: Union[str, schemes.Scheme] = samplers.SYSTEMATIC
     seed: int = 0
     host: int = 0
     num_hosts: int = 1
@@ -135,10 +136,28 @@ class PrefetchPipeline:
 
     # ---- state (for checkpointing) ------------------------------------
     def state_dict(self) -> Dict:
-        return {"sampling": self.cfg.sampling, "seed": self.cfg.seed,
+        return {"sampling": self.scheme.name, "seed": self.cfg.seed,
                 "step": self.sampler.step, "host": self.cfg.host,
                 "num_hosts": self.cfg.num_hosts,
                 "batch_size": self.cfg.batch_size}
+
+    def sampler_meta(self) -> Dict:
+        """The scheme's own checkpoint dict (``Scheme.state_meta``) — what
+        the executors persist as ``sampler_state``.  For the uniform schemes
+        this is the historical two-integer ``{"scheme", "seed", "step"}``
+        layout; adaptive schemes append their params + learning state."""
+        return self.scheme.state_meta(self.sampler)
+
+    def observe(self, batch_stats: Dict) -> None:
+        """Feed run statistics back into the sampling state (adaptive
+        schemes' ``Scheme.observe``).  Guarded like :meth:`read_batch`: the
+        producer thread owns the sampler while it is alive, so observing
+        mid-stream would race the deterministic schedule."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError(
+                "prefetch producer is active; observe() would race on "
+                "sampler state — drain the epoch (or use prefetch=0) first")
+        self.sampler = self.scheme.observe(self.sampler, batch_stats)
 
     # ---- synchronous read ----------------------------------------------
     def _check_not_resident(self):
@@ -215,26 +234,33 @@ class DataPipeline(PrefetchPipeline):
     """Iterator over host-local mini-batches of corpus rows."""
 
     def __init__(self, cfg: PipelineConfig, start_step: int = 0,
-                 tracer=NULL_TRACER):
+                 tracer=NULL_TRACER, sampler_meta: Optional[Dict] = None):
         super().__init__(cfg.prefetch)
         self.cfg = cfg
         self.tracer = tracer
         self.mm, self.meta = open_corpus(cfg.corpus)
         lo, hi = host_shard(self.meta.rows, cfg.host, cfg.num_hosts)
         self.lo, self.hi = lo, hi
-        self.sampler = samplers.restore(
-            cfg.sampling, cfg.seed + cfg.host, start_step,
-            hi - lo, cfg.batch_size)
+        self.scheme = schemes.resolve(cfg.sampling)
+        # sampler_meta (a Scheme.state_meta dict) wins when given — exact
+        # adaptive-state resume; otherwise the historical (seed+host, step)
+        # construction, bit-identical for the uniform schemes
+        meta = sampler_meta if sampler_meta is not None else {
+            "scheme": self.scheme.name, "seed": cfg.seed + cfg.host,
+            "step": start_step}
+        self.sampler = self.scheme.restore(meta, hi - lo, cfg.batch_size)
         self.stats = AccessStats()
 
-    def _read_batch(self) -> np.ndarray:
+    def _read_batch(self):
         # timespan, not a raw perf_counter pair: the span's duration IS the
         # number booked into AccessStats, so trace and stats cannot drift
         with self.tracer.timespan("read", ACCESS,
-                                  scheme=self.sampler.scheme) as sp:
-            bi, self.sampler = samplers.next_indices(self.sampler)
-            if bi.start is not None:     # contiguous block (CS/SS)
-                start, b = bi.start, self.cfg.batch_size
+                                  scheme=self.scheme.name) as sp:
+            bi, self.sampler = self.scheme.next_batch(self.sampler)
+            b = bi.idx.shape[0]          # == batch_size except for
+            # variable-size schemes, where it is this step's draw
+            if bi.start is not None:     # contiguous block (CS/SS-profile)
+                start = bi.start
                 if start + b <= self.hi - self.lo:
                     # np.array, not asarray: a memmap slice is a lazy VIEW,
                     # and the timed region must actually fault the pages in
@@ -252,6 +278,19 @@ class DataPipeline(PrefetchPipeline):
                 rows = np.asarray(self.mm[self.lo + bi.idx])  # scattered gather
             sp.set(bytes=rows.nbytes)
         self.stats.record(sp.dur, rows.nbytes)
+        if self.scheme.adaptive:
+            bmax = self.cfg.batch_size
+            if b < bmax:
+                # variable-size scheme: pad the row count back to the static
+                # staged shape OUTSIDE the timed span — zero rows (features
+                # AND label) contribute exactly zero to the data gradient,
+                # and the scheme's weight re-normalizes the batch mean
+                rows = np.concatenate(
+                    [rows, np.zeros((bmax - b,) + rows.shape[1:],
+                                    rows.dtype)])
+            # adaptive consumers need the scheme's chosen table slot and
+            # unbiasedness weight alongside the payload
+            return rows, bi.j, bi.weight
         return rows
 
     # ---- resident (fused host) mode -------------------------------------
@@ -269,7 +308,7 @@ class DataPipeline(PrefetchPipeline):
                 "prefetch producer is active; resident staging and batch "
                 "streaming are mutually exclusive on one pipeline")
         with self.tracer.timespan("read_all", ACCESS,
-                                  scheme=self.sampler.scheme) as sp:
+                                  scheme=self.scheme.name) as sp:
             # forced copy: a memmap view would defer the actual read to the
             # device_put that follows, silently booking disk time as H2D
             rows = np.array(self.mm[self.lo:self.hi])

@@ -49,7 +49,7 @@ try:                       # optional accelerator for the streamed helpers
 except ImportError:        # pure-numpy fallback below
     _scipy_sparse = None
 
-from ..core import samplers
+from ..core import samplers, schemes
 from ..core.erm import LOGISTIC, SMOOTH_HINGE, SQUARE
 from ..obs import ACCESS, CONVERT, NULL_TRACER
 from .dataset import CorpusMeta, host_shard
@@ -331,7 +331,7 @@ class SparsePipeline(PrefetchPipeline):
     """
 
     def __init__(self, cfg: PipelineConfig, start_step: int = 0,
-                 tracer=NULL_TRACER):
+                 tracer=NULL_TRACER, sampler_meta=None):
         super().__init__(cfg.prefetch)
         self.cfg = cfg
         self.tracer = tracer
@@ -339,9 +339,11 @@ class SparsePipeline(PrefetchPipeline):
         self.meta = self.csr.meta
         lo, hi = host_shard(self.meta.rows, cfg.host, cfg.num_hosts)
         self.lo, self.hi = lo, hi
-        self.sampler = samplers.restore(
-            cfg.sampling, cfg.seed + cfg.host, start_step,
-            hi - lo, cfg.batch_size)
+        self.scheme = schemes.resolve(cfg.sampling)
+        meta = sampler_meta if sampler_meta is not None else {
+            "scheme": self.scheme.name, "seed": cfg.seed + cfg.host,
+            "step": start_step}
+        self.sampler = self.scheme.restore(meta, hi - lo, cfg.batch_size)
         self.stats = AccessStats()
         self.kmax = self.csr.kmax
         self._itemsize = (self.csr.indices.itemsize
@@ -359,7 +361,7 @@ class SparsePipeline(PrefetchPipeline):
         y = np.array(self.csr.labels[r0:r1])
         return flat_c, flat_v, np.diff(ptr), ptr[:-1] - ptr[0], y, ptr
 
-    def _read_batch(self) -> SparseBatch:
+    def _read_batch(self):
         # the timed span covers the READS only (indptr, indices, values,
         # labels — what the access pattern governs); the ELL padding below
         # is batch FORMATTING, the sparse analogue of the dense path's
@@ -367,10 +369,12 @@ class SparsePipeline(PrefetchPipeline):
         # never inflates access accounting.  The span's duration is the
         # number booked into AccessStats — trace and stats cannot drift.
         with self.tracer.timespan("read", ACCESS,
-                                  scheme=self.sampler.scheme) as sp:
-            csr, b = self.csr, self.cfg.batch_size
-            bi, self.sampler = samplers.next_indices(self.sampler)
-            if bi.start is not None:     # contiguous block (CS/SS)
+                                  scheme=self.scheme.name) as sp:
+            csr = self.csr
+            bi, self.sampler = self.scheme.next_batch(self.sampler)
+            b = bi.idx.shape[0]          # this step's row count (== the
+            # configured batch size except for variable-size schemes)
+            if bi.start is not None:     # contiguous block (CS/SS-profile)
                 r0 = self.lo + bi.start
                 start = bi.start
                 if start + b <= self.hi - self.lo:
@@ -415,7 +419,24 @@ class SparsePipeline(PrefetchPipeline):
         self.stats.record(sp.dur, nbytes)
         with self.tracer.span("ell_pad", CONVERT, nnz=nnz):
             cols, vals = _pad_segments(fc, fv, lens, offs, self.kmax)
-        return SparseBatch(cols, vals, y.astype(np.float32), nnz)
+            y = y.astype(np.float32)
+            bmax = self.cfg.batch_size
+            if b < bmax:
+                # variable-size scheme: pad the ROW count back to the static
+                # staged shape with all-zero rows (zero features and zero
+                # label contribute exactly zero to the ELL data gradient;
+                # the scheme's weight re-normalizes the batch mean).  Pure
+                # formatting — access accounting above counted only the b
+                # real rows.
+                cols = np.concatenate(
+                    [cols, np.zeros((bmax - b, self.kmax), np.int32)])
+                vals = np.concatenate(
+                    [vals, np.zeros((bmax - b, self.kmax), np.float32)])
+                y = np.concatenate([y, np.zeros(bmax - b, np.float32)])
+        batch = SparseBatch(cols, vals, y, nnz)
+        if self.scheme.adaptive:
+            return batch, bi.j, bi.weight
+        return batch
 
 
 # ---------------------------------------------------------------------------
@@ -492,6 +513,35 @@ def csr_objective(problem, csr: CSRCorpus, w, *, chunk: int = 8192) -> float:
         y = np.asarray(csr.labels[lo:hi], np.float64)
         total += float(_loss_np(problem.loss, z, y).sum())
     return total / csr.rows + 0.5 * problem.reg * float(wn @ wn)
+
+
+def csr_block_losses(problem, csr: CSRCorpus, w, batch_size: int,
+                     *, chunk: int = 8192) -> Tuple[np.ndarray, float]:
+    """Per-contiguous-block mean data loss AND the full objective, one
+    streamed pass over a CSR corpus.
+
+    Block ``j`` is rows ``[j*b, min((j+1)*b, rows))`` — the same contiguous
+    blocks :class:`~repro.core.schemes.ChunkImportance` stages — so the
+    returned ``(m,)`` vector feeds straight into ``Scheme.observe`` as
+    ``block_losses``.  Returns ``(block_means, objective)``; the objective
+    (mean loss + l2 term) comes free from the same margins, so the adaptive
+    executor's per-epoch eval costs one pass, not two.
+    """
+    wn = np.asarray(w, np.float64)
+    b = batch_size
+    m = -(-csr.rows // b)
+    sums = np.zeros(m, np.float64)
+    counts = np.zeros(m, np.int64)
+    for lo in range(0, csr.rows, chunk):
+        hi = min(csr.rows, lo + chunk)
+        z, _, _, _ = _chunk_margins(csr, wn, lo, hi)
+        y = np.asarray(csr.labels[lo:hi], np.float64)
+        losses = _loss_np(problem.loss, z, y)
+        blk = (lo + np.arange(hi - lo)) // b
+        np.add.at(sums, blk, losses)
+        np.add.at(counts, blk, 1)
+    obj = float(sums.sum()) / csr.rows + 0.5 * problem.reg * float(wn @ wn)
+    return sums / np.maximum(counts, 1), obj
 
 
 def csr_lipschitz(problem, csr: CSRCorpus, *, chunk: int = 8192) -> float:

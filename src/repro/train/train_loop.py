@@ -133,10 +133,11 @@ class Trainer:
         (params, opt_state), meta = self.ckpt.restore((params, opt_state))
         self.step = int(meta["step"])
         if self.pipeline is not None and "pipeline" in meta:
-            from ..core import samplers
+            from ..core import schemes
             ps = meta["pipeline"]
-            self.pipeline.sampler = samplers.restore(
-                ps["sampling"], ps["seed"] + ps["host"], ps["step"],
+            self.pipeline.sampler = schemes.restore_state(
+                {"scheme": ps["sampling"], "seed": ps["seed"] + ps["host"],
+                 "step": ps["step"]},
                 self.pipeline.sampler.l, ps["batch_size"])
         return params, opt_state, True
 

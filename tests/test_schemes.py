@@ -1,0 +1,401 @@
+"""Scheme protocol tests (PR 10).
+
+Four contracts pin the sampler API redesign:
+
+1. **Legacy parity** — the protocol's RS/CS/SS reproduce the pre-refactor
+   ``samplers.next_indices`` streams bit-for-bit (the reference
+   implementation is embedded verbatim below, copied from the pre-protocol
+   module, so the parity holds against the CODE that shipped, not against
+   a re-derivation).
+2. **Restore exactness** — every scheme (adaptive learning state included)
+   replays bit-identically through ``Scheme.restore(state_meta(...))`` at
+   arbitrary steps, and through a checkpoint+``resume_from`` crash resume
+   of ``execute()``.
+3. **Unbiasedness invariants** — ChunkImportance weights satisfy
+   ``weight_j = 1/(m p_j)`` with the floor mixture; StochasticBatch draws
+   ``b_t in [ceil(min_frac b), b]`` with ``weight = b/b_t`` over a
+   contiguous cursor.
+4. **One validator** — bad scheme params raise ``ValueError`` from
+   ``Scheme.validate`` directly and surface as ``PlanError`` from
+   ``plan()``; string and object specs execute bit-identically.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from tests.hypothesis_compat import given, settings, st
+
+from repro.core import samplers, schemes
+
+UNIFORM = [schemes.Random(), schemes.Random(with_replacement=True),
+           schemes.Cyclic(), schemes.Systematic()]
+ADAPTIVE = [schemes.ChunkImportance(), schemes.StochasticBatch(),
+            schemes.StochasticBatch(min_frac=0.25)]
+ALL = UNIFORM + ADAPTIVE
+
+
+def _stream(state, steps):
+    out = []
+    for _ in range(steps):
+        bi, state = state.scheme.next_batch(state)
+        out.append(bi)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# 1. legacy parity: the pre-refactor next_indices, verbatim
+# ---------------------------------------------------------------------------
+
+def _legacy_next_indices(state):
+    """The pre-protocol ``samplers.next_indices`` body, copied verbatim
+    (minus the docstring) from the module as it shipped before the Scheme
+    redesign.  THE reference the protocol must match bit-for-bit."""
+    j = state.batch_in_epoch
+    b, l, m = state.batch_size, state.l, state.m
+    start = None
+    if state.scheme == samplers.CYCLIC:
+        start = j * b
+        idx = np.arange(start, start + b, dtype=np.int64) % l
+    elif state.scheme == samplers.SYSTEMATIC:
+        start = int(samplers._epoch_perm(state, m)[j]) * b
+        idx = (start + np.arange(b, dtype=np.int64)) % l
+    elif state.with_replacement:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([state.seed, state.step]))
+        idx = rng.integers(0, l, size=b)
+    else:
+        perm = samplers._epoch_perm(state, l)
+        lo, hi = j * b, (j + 1) * b
+        if hi <= l:
+            idx = perm[lo:hi]
+        else:
+            idx = np.concatenate([perm[lo:], perm[: hi - l]])
+    return (idx.astype(np.int64), start,
+            dataclasses.replace(state, step=state.step + 1))
+
+
+@given(scheme=st.sampled_from(list(samplers.SCHEMES)),
+       wr=st.booleans(), l=st.integers(5, 400), b=st.integers(1, 40),
+       seed=st.integers(0, 2 ** 30))
+@settings(max_examples=60, deadline=None)
+def test_protocol_matches_pre_refactor_stream(scheme, wr, l, b, seed):
+    """Protocol RS/CS/SS == the shipped pre-protocol implementation, across
+    2+ epochs (covers the memoized-perm path and trailing-batch wraps)."""
+    wr = wr and scheme == samplers.RANDOM
+    m = samplers.num_batches(l, b)
+    steps = 2 * m + 3
+    legacy = samplers.make_sampler(scheme, seed, l, b, wr)
+    obj = schemes.resolve(scheme, wr)
+    state = obj.bind(l, b, seed)
+    for k in range(steps):
+        idx, start, legacy = _legacy_next_indices(legacy)
+        bi, state = obj.next_batch(state)
+        np.testing.assert_array_equal(bi.idx, idx)
+        assert bi.start == start
+        assert bi.j == k % m          # uniform schemes: slot is arithmetic
+        assert bi.weight == 1.0
+
+
+@given(scheme=st.sampled_from(list(samplers.SCHEMES)), wr=st.booleans(),
+       l=st.integers(5, 300), b=st.integers(1, 32),
+       seed=st.integers(0, 2 ** 30))
+@settings(max_examples=30, deadline=None)
+def test_shim_next_indices_matches_protocol(scheme, wr, l, b, seed):
+    """The kept ``samplers.next_indices`` surface is a faithful shim."""
+    wr = wr and scheme == samplers.RANDOM
+    legacy = samplers.make_sampler(scheme, seed, l, b, wr)
+    obj = schemes.resolve(scheme, wr)
+    state = obj.bind(l, b, seed)
+    for _ in range(samplers.num_batches(l, b) + 2):
+        bi_shim, legacy = samplers.next_indices(legacy)
+        bi, state = obj.next_batch(state)
+        np.testing.assert_array_equal(bi_shim.idx, bi.idx)
+        assert bi_shim.start == bi.start
+
+
+# ---------------------------------------------------------------------------
+# 2. restore exactness (state_meta round trip), adaptive aux included
+# ---------------------------------------------------------------------------
+
+@given(si=st.integers(0, len(ALL) - 1), l=st.integers(5, 400),
+       b=st.integers(1, 40), seed=st.integers(0, 2 ** 30),
+       k=st.integers(0, 30))
+@settings(max_examples=60, deadline=None)
+def test_restore_replays_every_scheme_bit_identically(si, l, b, seed, k):
+    scheme = ALL[si]
+    m = schemes.num_batches(l, b)
+    total = k + m + 2          # tail crosses an epoch boundary
+    want, _ = _stream(scheme.bind(l, b, seed), total)
+    mid = _stream(scheme.bind(l, b, seed), k)[1]
+    got, _ = _stream(scheme.restore(scheme.state_meta(mid), l, b), total - k)
+    for a, c in zip(want[k:], got):
+        np.testing.assert_array_equal(a.idx, c.idx)
+        assert (a.start, a.j) == (c.start, c.j)
+        assert a.weight == c.weight
+
+
+@given(l=st.integers(40, 400), b=st.integers(2, 40),
+       seed=st.integers(0, 2 ** 30), epochs=st.integers(1, 3))
+@settings(max_examples=30, deadline=None)
+def test_chunk_importance_restore_carries_learned_scores(l, b, seed, epochs):
+    """Observe feedback between epochs, checkpoint at an epoch boundary,
+    restore: the continued stream (which depends on the learned scores)
+    must match the uninterrupted one."""
+    scheme = schemes.ChunkImportance(ema=0.5, floor=0.2)
+    m = schemes.num_batches(l, b)
+    rng = np.random.default_rng(seed)
+    losses = [rng.uniform(0.1, 2.0, size=m) for _ in range(epochs)]
+
+    def run(state, upto):
+        seen = []
+        for e in range(upto):
+            batch, state = _stream(state, m)
+            seen.extend(batch)
+            state = scheme.observe(state, {"block_losses": losses[e]})
+        return seen, state
+
+    full, _ = run(scheme.bind(l, b, seed), epochs)
+    # checkpoint after the first epoch's observe, restore, continue
+    _, mid = run(scheme.bind(l, b, seed), 1)
+    restored = scheme.restore(scheme.state_meta(mid), l, b)
+    np.testing.assert_array_equal(restored.aux[0], mid.aux[0])
+    tail = []
+    state = restored
+    for e in range(1, epochs):
+        batch, state = _stream(state, m)
+        tail.extend(batch)
+        state = scheme.observe(state, {"block_losses": losses[e]})
+    for a, c in zip(full[m:], tail):
+        np.testing.assert_array_equal(a.idx, c.idx)
+        assert (a.j, a.weight) == (c.j, c.weight)
+
+
+def test_stochastic_batch_legacy_meta_replays_cursor():
+    """A meta without the cursor (legacy layout) is reconstructed by
+    replaying the (seed, step)-pure draws."""
+    scheme = schemes.StochasticBatch(min_frac=0.4)
+    state = scheme.bind(101, 8, seed=5)
+    _, state = _stream(state, 17)
+    meta = scheme.state_meta(state)
+    assert meta["pos"] == state.aux[0]
+    del meta["pos"]
+    restored = scheme.restore(meta, 101, 8)
+    assert restored.aux[0] == state.aux[0]
+
+
+# ---------------------------------------------------------------------------
+# 3. adaptive invariants
+# ---------------------------------------------------------------------------
+
+@given(l=st.integers(40, 400), b=st.integers(2, 40),
+       seed=st.integers(0, 2 ** 30))
+@settings(max_examples=30, deadline=None)
+def test_chunk_importance_weight_is_inverse_probability(l, b, seed):
+    scheme = schemes.ChunkImportance()
+    state = scheme.bind(l, b, seed)
+    m = state.m
+    # learn a skewed score vector so the probabilities are non-uniform
+    state = scheme.observe(state, {
+        "block_losses": np.linspace(0.1, 3.0, m)})
+    p = scheme._probs(state)
+    assert np.isclose(p.sum(), 1.0)
+    assert p.min() * m >= scheme.floor * 0.99   # floor bounds the weights
+    bi, _ = scheme.next_batch(state)
+    assert np.isclose(bi.weight, 1.0 / (m * p[bi.j]))
+    assert bi.start == bi.j * b                 # contiguous block
+    np.testing.assert_array_equal(
+        bi.idx, (bi.start + np.arange(b)) % l)
+    # unbiasedness: E_j[weight_j] = sum_j p_j / (m p_j) = 1
+    assert np.isclose(np.sum(p / (m * p)), 1.0)
+
+
+@given(l=st.integers(40, 400), b=st.integers(2, 40),
+       seed=st.integers(0, 2 ** 30), k=st.integers(1, 40))
+@settings(max_examples=40, deadline=None)
+def test_stochastic_batch_draw_range_weight_and_cursor(l, b, seed, k):
+    scheme = schemes.StochasticBatch(min_frac=0.5)
+    state = scheme.bind(l, b, seed)
+    lo = max(1, int(np.ceil(0.5 * b)))
+    pos = 0
+    for _ in range(k):
+        bi, state = scheme.next_batch(state)
+        b_t = bi.idx.shape[0]
+        assert lo <= b_t <= b
+        assert bi.weight == b / float(b_t)
+        assert bi.start == pos                  # contiguous at the cursor
+        np.testing.assert_array_equal(bi.idx, (pos + np.arange(b_t)) % l)
+        pos = (pos + b_t) % l
+    assert state.aux[0] == pos
+
+
+def test_chunk_importance_observe_validates_shape():
+    scheme = schemes.ChunkImportance()
+    state = scheme.bind(100, 10, seed=0)
+    with pytest.raises(ValueError, match="block_losses shape"):
+        scheme.observe(state, {"block_losses": np.ones(3)})
+    # scores mismatching the corpus geometry are rejected on restore too
+    meta = scheme.state_meta(state)
+    meta["scores"] = [1.0, 2.0]
+    with pytest.raises(ValueError, match="block scores"):
+        scheme.restore(meta, 100, 10)
+
+
+# ---------------------------------------------------------------------------
+# 4. one validator, two boundaries; serialization identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    schemes.ChunkImportance(ema=0.0),
+    schemes.ChunkImportance(ema=1.5),
+    schemes.ChunkImportance(floor=-0.1),
+    schemes.StochasticBatch(min_frac=0.0),
+    schemes.StochasticBatch(dist="poisson"),
+])
+def test_bad_params_raise_valueerror_directly(bad):
+    with pytest.raises(ValueError):
+        bad.validate(batch_size=8)
+    with pytest.raises(ValueError):
+        bad.bind(100, 8, seed=0)
+
+
+def test_resolve_and_canonical():
+    assert schemes.resolve("systematic") == schemes.Systematic()
+    assert (schemes.resolve("random", with_replacement=True)
+            == schemes.Random(with_replacement=True))
+    with pytest.raises(ValueError, match="unknown sampling scheme"):
+        schemes.resolve("sorted")
+    with pytest.raises(ValueError, match="string or a Scheme"):
+        schemes.resolve(3)
+    a = schemes.ChunkImportance(ema=0.5)
+    assert a.canonical() != schemes.ChunkImportance().canonical()
+    assert (schemes.resolve("cyclic").canonical()
+            == schemes.Cyclic().canonical())
+
+
+def test_from_meta_roundtrip():
+    for scheme in ALL:
+        state = scheme.bind(50, 5, seed=1)
+        meta = scheme.state_meta(state)
+        back = schemes.from_meta(meta)
+        assert back == scheme
+        st2 = schemes.restore_state(meta, 50, 5)
+        assert st2.step == state.step and st2.seed == state.seed
+    # legacy two-integer meta (no params key) still resolves
+    st3 = schemes.restore_state(
+        {"scheme": "systematic", "seed": 4, "step": 7}, 50, 5)
+    assert (st3.seed, st3.step) == (4, 7)
+    # resident-style epoch meta
+    st4 = schemes.restore_state(
+        {"scheme": "cyclic", "seed": 0, "epochs": 2}, 50, 5)
+    assert st4.step == 2 * schemes.num_batches(50, 5)
+
+
+def test_deprecated_sampler_shims_still_restore():
+    s = samplers.restore("systematic", seed=9, step=13, l=120, batch_size=8)
+    assert (s.seed, s.step) == (9, 13)
+    s2 = samplers.restore_from_meta(
+        {"scheme": "systematic", "seed": 9, "step": 13}, 120, 8)
+    assert s2 == s
+    assert s2._memo == {}
+
+
+# ---------------------------------------------------------------------------
+# 5. executor integration: string vs object specs, adaptive crash resume
+# ---------------------------------------------------------------------------
+
+import jax  # noqa: E402
+
+from repro.api import (CheckpointPolicy, DataSource,  # noqa: E402
+                       ExperimentSpec, PlanError, execute, plan, resume_from)
+from repro.core.solvers import SOLVERS  # noqa: E402
+from repro.data import dataset  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def scheme_corpus(tmp_path_factory):
+    path = tmp_path_factory.mktemp("schemes") / "dense.bin"
+    dataset.synth_erm_corpus(path, rows=600, features=12, seed=3)
+    return path
+
+
+def _run(corpus, scheme, solver="saga", **kw):
+    kw.setdefault("epochs", 2)
+    spec = ExperimentSpec(data=DataSource.corpus(corpus), solver=solver,
+                          scheme=scheme, batch_size=100, seed=11,
+                          step_mode="constant", step_size=0.05,
+                          placement="streamed", record_objective=True, **kw)
+    return execute(plan(spec))
+
+
+@pytest.mark.parametrize("solver", sorted(SOLVERS))
+def test_string_and_object_specs_run_bit_identically(scheme_corpus, solver):
+    """Spec migration contract: scheme='systematic' and Systematic() lower
+    to the same plan fingerprint and produce the same trajectory — for all
+    five solvers."""
+    a = _run(scheme_corpus, "systematic", solver)
+    b = _run(scheme_corpus, schemes.Systematic(), solver)
+    assert a.plan.scheme_name == b.plan.scheme_name == "systematic"
+    np.testing.assert_array_equal(a.w, b.w)
+    np.testing.assert_array_equal(a.history, b.history)
+
+
+@pytest.mark.parametrize("name,obj", [
+    ("random", schemes.Random()),
+    ("cyclic", schemes.Cyclic()),
+])
+def test_string_and_object_specs_other_schemes(scheme_corpus, name, obj):
+    a = _run(scheme_corpus, name)
+    b = _run(scheme_corpus, obj)
+    np.testing.assert_array_equal(a.w, b.w)
+
+
+@pytest.mark.parametrize("scheme", [schemes.ChunkImportance(),
+                                    schemes.StochasticBatch()])
+def test_adaptive_checkpoint_resume_is_bit_identical(scheme_corpus,
+                                                     tmp_path, scheme):
+    """Crash-resume contract for the adaptive schemes: 2 epochs +
+    checkpoint + resume_from (the no-spec crash path, scheme params
+    rebuilt from the fingerprint) + 2 epochs == 4 uninterrupted epochs,
+    learning state (scores / cursor) included."""
+    full = _run(scheme_corpus, scheme, epochs=4)
+    ck = tmp_path / f"ck_{scheme.name}"
+    spec = ExperimentSpec(data=DataSource.corpus(scheme_corpus),
+                          solver="saga", scheme=scheme, batch_size=100,
+                          seed=11, step_mode="constant", step_size=0.05,
+                          placement="streamed", record_objective=True,
+                          epochs=4, checkpoint=CheckpointPolicy(ck, every=1))
+    execute(plan(spec), epochs=2)
+    restored = resume_from(ck)
+    assert restored.plan.scheme_obj == scheme   # params survived the crash
+    r = execute(restored.plan, resume=restored, epochs=2)
+    np.testing.assert_array_equal(full.w, r.w)
+    np.testing.assert_array_equal(full.history, r.history)
+
+
+def test_plan_rejects_adaptive_line_search_and_resident(scheme_corpus):
+    src = DataSource.corpus(scheme_corpus)
+    with pytest.raises(PlanError, match="importance-weighted"):
+        plan(ExperimentSpec(data=src, scheme=schemes.ChunkImportance(),
+                            step_mode="line_search", batch_size=100))
+    with pytest.raises(PlanError, match="resident"):
+        plan(ExperimentSpec(data=src, scheme=schemes.StochasticBatch(),
+                            placement="resident", batch_size=100,
+                            step_size=0.05))
+    with pytest.raises(PlanError):
+        plan(ExperimentSpec(data=src, scheme="sorted", batch_size=100,
+                            step_size=0.05))
+    # bad adaptive params surface as PlanError at the plan() boundary
+    with pytest.raises(PlanError, match="ema"):
+        plan(ExperimentSpec(data=src,
+                            scheme=schemes.ChunkImportance(ema=2.0),
+                            batch_size=100, step_size=0.05))
+
+
+def test_plan_serialization_carries_scheme_params(scheme_corpus):
+    import json
+    r = _run(scheme_corpus, schemes.ChunkImportance(ema=0.7), epochs=1)
+    d = json.loads(json.dumps(r.to_json()))
+    assert d["plan"]["scheme"] == "chunk_importance"
+    assert d["plan"]["scheme_params"]["ema"] == 0.7
+    assert "chunk_importance" in r.plan.describe()
